@@ -1,0 +1,104 @@
+"""Shared benchmark machinery: scaled experiment configs, federation cache,
+method dispatch. One benchmark per paper table lives in run.py."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper_cifar import DenseExperimentConfig
+from repro.core import evaluate, train_dense_server
+from repro.data import make_classification_data
+from repro.fl import (CommLedger, build_federation, fed_adi, fed_dafl,
+                      fed_df, fedavg)
+
+
+def base_cfg(full: bool) -> DenseExperimentConfig:
+    """CPU-scaled analogue of the paper's §3.1.4 setting (DESIGN.md §2:
+    relative claims, not absolute CIFAR numbers)."""
+    if full:
+        return DenseExperimentConfig(
+            n_clients=5, alpha=0.5, local_epochs=12, batch_size=64,
+            num_classes=10, image_size=16, in_ch=3, train_per_class=96,
+            test_per_class=32, client_kinds=("cnn1",) * 5,
+            global_kind="cnn1", width=0.5, nz=64, t_g=6, epochs=70,
+            synth_batch=64, s_steps=6)
+    return DenseExperimentConfig(
+        n_clients=3, alpha=0.5, local_epochs=6, batch_size=64,
+        num_classes=6, image_size=16, in_ch=3, train_per_class=48,
+        test_per_class=16, client_kinds=("cnn1",) * 3, global_kind="cnn1",
+        width=0.5, nz=32, t_g=4, epochs=25, synth_batch=64, s_steps=4)
+
+
+_DATA_CACHE: dict = {}
+_FED_CACHE: dict = {}
+
+
+def get_data(scfg, seed=0):
+    k = (scfg.num_classes, scfg.image_size, scfg.in_ch,
+         scfg.train_per_class, scfg.test_per_class, seed)
+    if k not in _DATA_CACHE:
+        _DATA_CACHE[k] = make_classification_data(
+            seed, num_classes=scfg.num_classes, size=scfg.image_size,
+            ch=scfg.in_ch, train_per_class=scfg.train_per_class,
+            test_per_class=scfg.test_per_class)
+    return _DATA_CACHE[k]
+
+
+def get_federation(scfg, seed=0):
+    k = (scfg.n_clients, scfg.alpha, scfg.client_kinds, scfg.local_epochs,
+         scfg.use_ldam, scfg.width, scfg.num_classes, scfg.image_size, seed)
+    if k not in _FED_CACHE:
+        data = get_data(scfg, seed)
+        ledger = CommLedger()
+        clients, _ = build_federation(jax.random.PRNGKey(seed), scfg, data,
+                                      ledger=ledger, seed=seed)
+        _FED_CACHE[k] = (data, clients, ledger)
+    return _FED_CACHE[k]
+
+
+def run_method(method: str, scfg, seed=0, **dense_kw):
+    """-> (test_acc, seconds). Methods: fedavg feddf feddafl fedadi dense."""
+    data, clients, _ = get_federation(scfg, seed)
+    xt, yt = data["test"]
+    key = jax.random.PRNGKey(100 + seed)
+    t0 = time.time()
+    if method == "fedavg":
+        params = fedavg(clients)
+        spec = clients[0].spec
+    elif method == "feddf":
+        params, spec = fed_df(key, clients, scfg)
+    elif method == "feddafl":
+        params, spec = fed_dafl(key, clients, scfg)
+    elif method == "fedadi":
+        params, spec = fed_adi(key, clients, scfg)
+    elif method == "dense":
+        params, _, _ = train_dense_server(key, clients, scfg, **dense_kw)
+        spec = dataclasses.replace(
+            clients[0].spec, kind=scfg.global_kind)
+    else:
+        raise ValueError(method)
+    dt = time.time() - t0
+    return evaluate(params, spec, xt, yt), dt
+
+
+def ensemble_acc(scfg, seed=0):
+    """Distillation ceiling: accuracy of the averaged-logit ensemble."""
+    import jax.numpy as jnp
+    from repro.core import ensemble_logits, split_clients
+    data, clients, _ = get_federation(scfg, seed)
+    xt, yt = data["test"]
+    specs, cparams = split_clients(clients)
+    f = jax.jit(lambda cp, x: ensemble_logits(specs, cp, x))
+    pred = []
+    for i in range(0, len(yt), 256):
+        pred.append(np.argmax(np.asarray(
+            f(cparams, jnp.asarray(xt[i:i + 256]))), -1))
+    return float((np.concatenate(pred) == yt).mean())
+
+
+def emit(name: str, seconds: float, derived: str):
+    """CSV contract: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)

@@ -1,0 +1,208 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the repo contract. Default is
+a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
+
+  T1  accuracy across alpha (non-IID severity) x methods     [Table 1]
+  T2  heterogeneous client architectures                     [Table 2]
+  T3  accuracy vs number of clients                          [Table 3]
+  T4  DENSE + LDAM on skewed data                            [Table 4]
+  T5  multi-round extension                                  [Table 5]
+  T6  generator-loss ablation (CE / BN / div)                [Table 6]
+  F3  one-shot FedAvg vs DENSE vs local models               [Figure 3]
+  K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
+  R   roofline summary from dry-run artifacts                [§Roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (base_cfg, emit, ensemble_acc, get_federation,
+                               run_method)
+
+
+def t1_alpha_sweep(full: bool):
+    alphas = (0.1, 0.3, 0.5) if full else (0.1, 0.5)
+    methods = ("fedavg", "feddf", "feddafl", "fedadi", "dense")
+    for alpha in alphas:
+        scfg = dataclasses.replace(base_cfg(full), alpha=alpha)
+        ens = ensemble_acc(scfg)
+        emit(f"t1/ensemble_ceiling/alpha{alpha}", 0.0, f"acc={ens:.4f}")
+        for m in methods:
+            acc, dt = run_method(m, scfg)
+            emit(f"t1/{m}/alpha{alpha}", dt, f"acc={acc:.4f}")
+
+
+def t2_heterogeneous(full: bool):
+    kinds = (("resnet18", "cnn1", "cnn2", "wrn16_1", "wrn40_1") if full
+             else ("cnn1", "cnn2", "wrn16_1"))
+    scfg = dataclasses.replace(
+        base_cfg(full), client_kinds=kinds, n_clients=len(kinds),
+        global_kind="wrn16_1" if not full else "resnet18")
+    for m in ("feddf", "feddafl", "fedadi", "dense"):
+        acc, dt = run_method(m, scfg)
+        emit(f"t2/{m}/hetero{len(kinds)}", dt, f"acc={acc:.4f}")
+
+
+def t3_num_clients(full: bool):
+    ms = (5, 10, 20) if full else (3, 6)
+    for n in ms:
+        scfg = dataclasses.replace(base_cfg(full), n_clients=n,
+                                   client_kinds=("cnn1",) * n)
+        for m in (("fedavg", "feddf", "fedadi", "dense") if full
+                  else ("fedavg", "dense")):
+            acc, dt = run_method(m, scfg)
+            emit(f"t3/{m}/m{n}", dt, f"acc={acc:.4f}")
+
+
+def t4_ldam(full: bool):
+    for alpha in ((0.1, 0.5) if full else (0.1,)):
+        for ldam in (False, True):
+            scfg = dataclasses.replace(base_cfg(full), alpha=alpha,
+                                       use_ldam=ldam)
+            acc, dt = run_method("dense", scfg)
+            name = "dense+ldam" if ldam else "dense"
+            emit(f"t4/{name}/alpha{alpha}", dt, f"acc={acc:.4f}")
+
+
+def t5_multiround(full: bool):
+    from repro.core import evaluate
+    from repro.data import make_classification_data
+    from repro.fl import dense_multi_round
+    rounds = (1, 2, 3) if full else (1, 2)
+    scfg = dataclasses.replace(base_cfg(full),
+                               local_epochs=8 if full else 4)
+    data = make_classification_data(0, num_classes=scfg.num_classes,
+                                    size=scfg.image_size, ch=scfg.in_ch,
+                                    train_per_class=scfg.train_per_class,
+                                    test_per_class=scfg.test_per_class)
+    xt, yt = data["test"]
+    for tc in rounds:
+        t0 = time.time()
+        gp, spec, _ = dense_multi_round(jax.random.PRNGKey(0), scfg, data,
+                                        rounds=tc)
+        acc = evaluate(gp, spec, xt, yt)
+        emit(f"t5/dense/rounds{tc}", time.time() - t0, f"acc={acc:.4f}")
+
+
+def t6_ablation(full: bool):
+    from repro.core import evaluate, train_dense_server
+    scfg = base_cfg(full)
+    data, clients, _ = get_federation(scfg)
+    xt, yt = data["test"]
+    variants = {"dense": {}, "w_ce_only": {"use_bn": False, "use_div": False},
+                "wo_bn": {"use_bn": False}, "wo_div": {"use_div": False}}
+    for name, kw in variants.items():
+        t0 = time.time()
+        stu, _, _ = train_dense_server(jax.random.PRNGKey(7), clients, scfg,
+                                       **kw)
+        acc = evaluate(stu, clients[0].spec, xt, yt)
+        emit(f"t6/{name}", time.time() - t0, f"acc={acc:.4f}")
+
+
+def f3_local_vs_global(full: bool):
+    """Figure 3: DENSE above local models; one-shot FedAvg below them."""
+    from repro.core import evaluate
+    scfg = base_cfg(full)
+    data, clients, _ = get_federation(scfg)
+    xt, yt = data["test"]
+    for i, c in enumerate(clients):
+        acc = evaluate(c.params, c.spec, xt, yt)
+        emit(f"f3/local{i}", 0.0, f"acc={acc:.4f}")
+    for m in ("fedavg", "dense"):
+        acc, dt = run_method(m, scfg)
+        emit(f"f3/{m}", dt, f"acc={acc:.4f}")
+
+
+def k_kernels(full: bool):
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
+    q = jax.random.normal(key, (B, Hq, S, D))
+    k = jax.random.normal(key, (B, Hkv, S, D))
+    v = jax.random.normal(key, (B, Hkv, S, D))
+    t0 = time.time()
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    jax.block_until_ready(o)
+    err = float(jnp.max(jnp.abs(o - ref.attention(q, k, v))))
+    emit("k/flash_attention/256x64", time.time() - t0,
+         f"max_err={err:.2e};interpret=cpu")
+
+    t_ = jax.random.normal(key, (64, 4096)) * 3
+    s_ = jax.random.normal(jax.random.PRNGKey(1), (64, 4096)) * 3
+    t0 = time.time()
+    r = ops.distill_kl(t_, s_, 32, 1024)
+    jax.block_until_ready(r)
+    err = float(jnp.max(jnp.abs(r - ref.distill_kl(t_, s_))))
+    emit("k/distill_kl/64x4096", time.time() - t0,
+         f"max_err={err:.2e};interpret=cpu")
+
+    x = jax.random.normal(key, (1, 256, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 256, 4)))
+    a = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
+    b = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
+    c = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
+    t0 = time.time()
+    y, st = ops.ssd_scan(x, dt, a, b, c, chunk=64)
+    jax.block_until_ready(y)
+    y2, _ = ref.ssd(x, dt, a, b, c)
+    err = float(jnp.max(jnp.abs(y - y2)))
+    emit("k/ssd_scan/256x4x32", time.time() - t0,
+         f"max_err={err:.2e};interpret=cpu")
+
+
+def r_roofline(full: bool):
+    """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
+    files = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "artifacts", "dryrun", "*.json")))
+    if not files:
+        emit("r/roofline", 0.0,
+             "no_artifacts;run=python -m repro.launch.dryrun --all")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"r/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") != "ok":
+            emit(tag, 0.0, f"status={rec.get('status')}")
+            continue
+        t = rec.get("roofline") or rec["roofline_raw"]
+        emit(tag, rec.get("compile_s", 0.0),
+             (f"bottleneck={rec['bottleneck']};"
+              f"compute_s={t['compute_s']:.4f};"
+              f"memory_s={t['memory_s']:.4f};"
+              f"collective_s={t['collective_s']:.6f};"
+              f"useful_ratio={rec.get('useful_flops_ratio', 0.0):.3f}"))
+
+
+TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
+          "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
+          "f3": f3_local_vs_global, "k": k_kernels, "r": r_roofline}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="EXPERIMENTS.md budget (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list of tables, e.g. t1,t6,k")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(TABLES)
+    print("name,us_per_call,derived", flush=True)
+    for n in names:
+        TABLES[n](args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""npz-based pytree checkpointing with path-flattened keys + JSON metadata."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _seg(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(path: str, tree, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if meta is not None:
+        with open(path.removesuffix(".npz") + ".json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (same treedef)."""
+    f = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like)
+    assert set(f.files) == set(flat_like), (
+        f"checkpoint keys mismatch: {set(f.files) ^ set(flat_like)}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = ["/".join(_seg(p) for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    new_leaves = [f[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return json.load(f)

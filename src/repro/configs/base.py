@@ -1,0 +1,232 @@
+"""Architecture configuration schema + registry.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting
+``CONFIG`` (the exact published shape) and ``smoke()`` (a reduced variant of
+the same family: <=2 layers, d_model<=512, <=4 experts) for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity
+    name: str = "unnamed"
+    family: str = "dense"           # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""                # citation (paper / model card)
+
+    # transformer trunk
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    max_seq_len: int = 131_072
+
+    # sliding-window pattern (gemma3): window size for local layers and the
+    # period of global layers (every `global_every`-th layer is global;
+    # 0 -> all layers global/full attention).
+    sliding_window: int = 0
+    global_every: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    first_dense: bool = False       # deepseek: layer 0 uses a dense MLP
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0           # 0 -> standard GQA path
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # SSM (mamba2)
+    ssm_state: int = 0              # N; 0 -> no ssm
+    ssm_head_dim: int = 64          # P
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_n_groups: int = 1
+
+    # hybrid (zamba2): one shared attention block every `attn_every` ssm
+    # blocks; n_layers counts ssm blocks + shared-block applications.
+    attn_every: int = 0
+
+    # VLM (llama-3.2-vision): a gated cross-attention layer every
+    # `cross_every`-th layer; vision frontend is stubbed (precomputed
+    # patch embeddings of shape (n_patches, vision_dim)).
+    cross_every: int = 0
+    n_patches: int = 0
+    vision_dim: int = 0
+
+    # audio (musicgen): decoder over EnCodec codes; frontend stubbed
+    # (precomputed frame embeddings). vocab_size = codec codebook size.
+    audio_frontend: bool = False
+
+    # numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True    # False: python-unrolled stack (the dry-run
+                                # uses small unrolled depth variants to get
+                                # trip-count-correct HLO cost analysis)
+    use_blockwise_attn: bool = True   # flash-style online-softmax attention
+                                      # for long sequences (§Perf-1); False
+                                      # reproduces the materialized baseline
+    attn_block_q: int = 1024          # blockwise attention tile sizes
+    attn_block_kv: int = 1024
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def attention_kind(self) -> str:
+        return "mla" if self.kv_lora_rank else "gqa"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("ssm",):
+            per_layer = _mamba2_params(self)
+            return emb + L * per_layer
+        if self.family == "hybrid":
+            n_shared_apps = L // (self.attn_every + 1)
+            n_ssm = L - n_shared_apps
+            shared = _attn_params(self) + 3 * d * self.d_ff  # one shared block
+            return emb + n_ssm * _mamba2_params(self) + shared
+        attn = _attn_params(self)
+        if self.n_experts:
+            mlp = (self.n_experts + self.n_shared_experts) * 3 * d * self.d_ff_expert \
+                + d * self.n_experts
+            if self.first_dense:
+                dense_mlp = 3 * d * (self.d_ff_expert * (self.top_k + self.n_shared_experts))
+                return emb + attn * L + mlp * (L - 1) + dense_mlp
+        else:
+            mlp = 3 * d * self.d_ff
+        total = emb + L * (attn + mlp)
+        if self.cross_every:
+            n_cross = L // (self.cross_every + 1)
+            total += n_cross * _attn_params(self)
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: only routed top-k + shared)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab_size * d
+        attn = _attn_params(self)
+        mlp_active = (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff_expert \
+            + d * self.n_experts
+        return emb + L * (attn + mlp_active)
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    if cfg.kv_lora_rank:
+        qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        q = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * qd) \
+            if cfg.q_lora_rank else d * cfg.n_heads * qd
+        kv = d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) \
+            + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        o = cfg.n_heads * cfg.v_head_dim * d
+        return q + kv + o
+    hd = cfg.head_dim
+    return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+
+
+def _mamba2_params(cfg: ArchConfig) -> int:
+    d, di, g, n = cfg.d_model, cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state
+    h = cfg.n_ssm_heads
+    in_proj = d * (2 * di + 2 * g * n + h)
+    conv = cfg.ssm_conv * (di + 2 * g * n)
+    out = di * d
+    return in_proj + conv + out + 2 * h + di  # A, D, norm
+
+
+# ----------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, str] = {}
+
+
+def register(name: str, module: str) -> None:
+    _REGISTRY[name] = module
+
+
+def available_archs() -> list[str]:
+    _ensure_registered()
+    return sorted(_REGISTRY)
+
+
+_ASSIGNED = [
+    "gemma3_4b", "musicgen_large", "deepseek_v2_236b", "deepseek_v2_lite_16b",
+    "qwen1_5_4b", "phi3_medium_14b", "llama3_2_3b", "llama3_2_vision_11b",
+    "mamba2_130m", "zamba2_7b",
+]
+
+
+def _ensure_registered() -> None:
+    if _REGISTRY:
+        return
+    for mod in _ASSIGNED:
+        _REGISTRY[mod.replace("_", "-")] = f"repro.configs.{mod}"
+
+
+_ALIASES = {
+    "qwen1.5-4b": "qwen1-5-4b",
+    "llama3.2-3b": "llama3-2-3b",
+    "llama-3.2-vision-11b": "llama3-2-vision-11b",
+    "llama3.2-vision-11b": "llama3-2-vision-11b",
+}
+
+
+def _resolve(name: str) -> str:
+    key = name.replace("_", "-")
+    key = _ALIASES.get(key, key)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {available_archs()}")
+    return key
+
+
+def _module(name: str):
+    _ensure_registered()
+    import importlib
+    return importlib.import_module(_REGISTRY[_resolve(name)])
+
+
+def get_config(name: str) -> ArchConfig:
+    """Look up an architecture by id, e.g. ``gemma3-4b`` or ``qwen1.5-4b``."""
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    return _module(name).smoke()

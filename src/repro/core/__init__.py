@@ -1,0 +1,23 @@
+"""DENSE core: the paper's primary contribution.
+
+Two-stage data-free one-shot FL (Algorithm 1): generator training against
+the client-model ensemble (losses.py, generator.py, ensemble.py) followed
+by ensemble->student distillation (dense.py). The LLM-scale distributed
+instantiation lives in repro/launch/dense_llm.py.
+"""
+from repro.core.dense import (train_dense_server, make_dense_steps,
+                              evaluate, merge_bn_stats, DenseHistory)
+from repro.core.ensemble import (Client, ensemble_logits, split_clients,
+                                 stack_homogeneous, ensemble_logits_stacked)
+from repro.core.losses import (softmax_kl, ce_loss, bn_loss, div_loss,
+                               gen_loss, distill_loss)
+from repro.core.generator import (img_generator, img_generator_init,
+                                  tok_generator, tok_generator_init)
+
+__all__ = [
+    "train_dense_server", "make_dense_steps", "evaluate", "merge_bn_stats",
+    "DenseHistory", "Client", "ensemble_logits", "split_clients",
+    "stack_homogeneous", "ensemble_logits_stacked", "softmax_kl", "ce_loss",
+    "bn_loss", "div_loss", "gen_loss", "distill_loss", "img_generator",
+    "img_generator_init", "tok_generator", "tok_generator_init",
+]

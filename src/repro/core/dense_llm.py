@@ -1,0 +1,205 @@
+"""DENSE at LLM scale — the paper's server loop as a mesh program.
+
+The paper's setting is CNN classifiers; the technique (average *logits*,
+never parameters; synthesize data against the ensemble; distill) is
+architecture-agnostic. This module instantiates it for the assigned
+decoder-LM families (DESIGN.md §3, §7):
+
+  * clients  = decoder LMs sharing a vocabulary (the label space);
+  * generator = token-sequence generator emitting *soft embeddings*
+    consumed via ``forward(..., embeds=...)``;
+  * D(x̂)    = ensemble-average next-token logits. On the production mesh
+    the (homogeneous) client stack is sharded over the ``pod`` axis — one
+    client replica group per pod — and the logit average lowers to a
+    single cross-pod all-reduce: the paper's server-side python loop
+    becomes one collective (DESIGN.md §6);
+  * L_BN     = embedding-statistics matching (no BatchNorm exists in these
+    LMs; recorded adaptation, DESIGN.md §7.2);
+  * L_dis    = token-level KL, fused large-vocab kernel on TPU
+    (repro/kernels/distill_kl).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ArchConfig
+from repro.core import generator as G
+from repro.core import losses as LS
+from repro.models import transformer as T
+
+
+# --------------------------------------------------- heterogeneous (host) --
+
+def ensemble_lm_logits(client_cfgs: Sequence[ArchConfig], client_params,
+                       embeds, *, mesh=None, dp_axes=()):
+    """D(x̂) over heterogeneous LM clients (python loop; shared vocab)."""
+    acc = None
+    for cfg, params in zip(client_cfgs, client_params):
+        lg, _, _ = T.forward(params, cfg, embeds=embeds, mesh=mesh,
+                             dp_axes=dp_axes, remat=False)
+        lg = lg.astype(jnp.float32)
+        acc = lg if acc is None else acc + lg
+    return acc / len(client_cfgs)
+
+
+def embed_stats_loss(client_cfgs, client_params, embeds):
+    """L_BN analogue: match generator-output feature statistics to each
+    client's embedding-table statistics (computable from the uploaded
+    parameters alone — data-free)."""
+    mu_g = jnp.mean(embeds.astype(jnp.float32), axis=(0, 1))
+    var_g = jnp.var(embeds.astype(jnp.float32), axis=(0, 1))
+    total = jnp.zeros((), jnp.float32)
+    for cfg, params in zip(client_cfgs, client_params):
+        tbl = params["embed"]["table"].astype(jnp.float32)
+        total = total + jnp.linalg.norm(mu_g - jnp.mean(tbl, 0)) \
+            + jnp.linalg.norm(var_g - jnp.var(tbl, 0))
+    return total / len(client_cfgs)
+
+
+def make_llm_dense_steps(student_cfg: ArchConfig,
+                         client_cfgs: Sequence[ArchConfig], *,
+                         gen_seq: int = 64, nz: int = 64,
+                         g_lr: float = 1e-3, s_lr: float = 1e-4,
+                         lambda_bn: float = 1.0, lambda_div: float = 0.5,
+                         mesh=None, dp_axes=()):
+    """Jitted (gen_step, student_step) for a heterogeneous LM federation
+    (host/smoke scale; the pod-sharded path is make_pod_distill_step)."""
+    g_opt = optim.adam(g_lr)
+    s_opt = optim.adam(s_lr)
+    V = student_cfg.vocab_size
+
+    @jax.jit
+    def gen_step(gen_p, g_state, stu_p, cparams, z, y):
+        def loss_fn(gp):
+            embeds = G.tok_generator(gp, z, y[:, 0])
+            avg = ensemble_lm_logits(client_cfgs, cparams, embeds,
+                                     mesh=mesh, dp_axes=dp_axes)
+            stu, _, _ = T.forward(stu_p, student_cfg, embeds=embeds,
+                                  mesh=mesh, dp_axes=dp_axes, remat=False)
+            af = avg.reshape(-1, V)
+            sf = stu.astype(jnp.float32).reshape(-1, V)
+            l_ce = LS.ce_loss(af, y.reshape(-1))
+            l_bn = embed_stats_loss(client_cfgs, cparams, embeds)
+            l_div = LS.div_loss(af, sf)
+            return l_ce + lambda_bn * l_bn + lambda_div * l_div, \
+                {"ce": l_ce, "bn": l_bn, "div": l_div}
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(gen_p)
+        new_p, new_s = g_opt.update(grads, g_state, gen_p)
+        return new_p, new_s, loss, parts
+
+    @jax.jit
+    def student_step(stu_p, s_state, gen_p, cparams, z, y):
+        embeds = jax.lax.stop_gradient(G.tok_generator(gen_p, z, y[:, 0]))
+        avg = ensemble_lm_logits(client_cfgs, cparams, embeds,
+                                 mesh=mesh, dp_axes=dp_axes)
+
+        def loss_fn(sp):
+            stu, _, _ = T.forward(sp, student_cfg, embeds=embeds, mesh=mesh,
+                                  dp_axes=dp_axes, remat=False)
+            return LS.distill_loss(avg.reshape(-1, V),
+                                   stu.astype(jnp.float32).reshape(-1, V))
+
+        loss, grads = jax.value_and_grad(loss_fn)(stu_p)
+        new_p, new_s = s_opt.update(grads, s_state, stu_p)
+        return new_p, new_s, loss
+
+    return gen_step, student_step, g_opt, s_opt
+
+
+# ------------------------------------------------ pod-sharded (dry-runable)
+
+def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
+                          s_lr: float = 1e-4, chunked_kl: bool = False,
+                          kl_chunk: int = 64):
+    """The paper-representative production cell: DENSE stage-2 distillation
+    with a homogeneous client stack vmapped over a leading ensemble dim.
+
+    The caller shards that dim over the ``pod`` mesh axis (multi-pod) —
+    the logit mean then lowers to one cross-pod all-reduce — or over no
+    axis (single pod: clients resident per-device group, mean is local).
+    Batch shards over ``data`` only; student params are pod-replicated, so
+    student grads all-reduce across pods exactly like data parallelism.
+
+    chunked_kl (§Perf-4, beyond-paper): never materialize the (B,S,V)
+    teacher/student logit tensors — keep trunk outputs as hidden states and
+    fuse readout + KL per sequence chunk (the XLA-level analogue of the
+    Pallas distill_kl kernel).
+    """
+    s_opt = optim.adam(s_lr)
+    dp = tuple(a for a in ("data",) if a in mesh.axis_names)
+    V = cfg.vocab_size
+
+    def ens_fwd(stacked_params, embeds, hidden: bool):
+        def one(p):
+            out, _, _ = T.forward(p, cfg, embeds=embeds, mesh=mesh,
+                                  dp_axes=dp, remat=False,
+                                  return_hidden=hidden)
+            return out if hidden else out.astype(jnp.float32)
+        outs = jax.vmap(one)(stacked_params)
+        return outs if hidden else jnp.mean(outs, axis=0)
+
+    def loss_materialized(sp, stacked_client_params, embeds):
+        avg = ens_fwd(stacked_client_params, embeds, hidden=False)
+        stu, _, _ = T.forward(sp, cfg, embeds=embeds, mesh=mesh,
+                              dp_axes=dp, remat=True)
+        return LS.distill_loss(avg.reshape(-1, V),
+                               stu.astype(jnp.float32).reshape(-1, V))
+
+    def loss_chunked(sp, stacked_client_params, embeds):
+        th = jax.lax.stop_gradient(
+            ens_fwd(stacked_client_params, embeds, hidden=True))  # (n,B,S,D)
+        sh, _, _ = T.forward(sp, cfg, embeds=embeds, mesh=mesh,
+                             dp_axes=dp, remat=True, return_hidden=True)
+        t_tbl = stacked_client_params["embed"]["table"]           # (n,V,D)
+        s_tbl = sp["embed"]["table"]
+        B, S, D = sh.shape
+        nc = S // kl_chunk
+
+        def chunk(args):
+            th_c, sh_c = args         # (n,B,c,D), (B,c,D)
+            t_lg = jnp.mean(jnp.einsum(
+                "nbcd,nvd->nbcv", th_c.astype(jnp.float32),
+                t_tbl.astype(jnp.float32)), axis=0)
+            s_lg = jnp.einsum("bcd,vd->bcv", sh_c, s_tbl.astype(sh_c.dtype))
+            return jnp.sum(LS.softmax_kl(t_lg.reshape(-1, V),
+                                         s_lg.astype(jnp.float32)
+                                         .reshape(-1, V)))
+
+        th_b = jnp.moveaxis(th.reshape(-1, B, nc, kl_chunk, D), 2, 0)
+        sh_b = jnp.moveaxis(sh.reshape(B, nc, kl_chunk, D), 1, 0)
+        tot = jax.lax.map(chunk, (th_b, sh_b))
+        return jnp.sum(tot) / (B * S)
+
+    loss_impl = loss_chunked if chunked_kl else loss_materialized
+
+    def distill_step(stu_state, stacked_client_params, embeds):
+        loss, grads = jax.value_and_grad(loss_impl)(
+            stu_state["params"], stacked_client_params, embeds)
+        new_p, new_opt = s_opt.update(grads, stu_state["opt"],
+                                      stu_state["params"])
+        return {"params": new_p, "opt": new_opt,
+                "step": stu_state["step"] + 1}, {"dis_loss": loss}
+
+    return distill_step
+
+
+def abstract_pod_inputs(cfg: ArchConfig, *, n_clients: int, batch: int,
+                        seq: int):
+    """ShapeDtypeStructs for the pod-sharded distillation dry-run."""
+    import numpy as np  # noqa: F401
+    params = jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_clients, *s.shape), s.dtype), params)
+    opt = jax.eval_shape(lambda: optim.adam(1e-4).init(
+        T.init_model(jax.random.PRNGKey(0), cfg)))
+    state = {"params": params, "opt": opt,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    embeds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return state, stacked, embeds

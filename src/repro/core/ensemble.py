@@ -1,0 +1,72 @@
+"""Heterogeneous client-model ensembles (Eq. 1: average logits).
+
+The paper's key aggregation move: average *logits*, never parameters —
+which is what makes heterogeneous client architectures possible. Clients
+are (CNNSpec, params) pairs; the python loop over clients unrolls under
+jit (m is small server-side), and for homogeneous ensembles a vmapped
+fast path stacks the client params.
+
+On the production mesh the same average is realized as a psum over the
+ensemble mesh axis — see repro/launch/dense_llm.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import CNNSpec, cnn_apply
+
+
+@dataclass
+class Client:
+    spec: CNNSpec
+    params: dict
+    n_data: int = 0                 # |D_k| (FedAvg weighting; DENSE ignores)
+    class_counts: jnp.ndarray | None = None
+
+
+def ensemble_logits(specs: Sequence[CNNSpec], params_list, x: jnp.ndarray,
+                    *, with_bn_stats: bool = False):
+    """Eq. (1): D(x) = (1/m) sum_k f^k(x). Eval-mode (running BN stats).
+
+    specs are static (shape info); params_list is a traced pytree so jitted
+    callers don't bake client weights in as constants. with_bn_stats
+    additionally returns each client's per-BN-layer batch statistics of x —
+    the inputs to L_BN (Eq. 3).
+    """
+    logits_sum = None
+    all_stats = []
+    for spec, params in zip(specs, params_list):
+        lg, _, stats = cnn_apply(params, spec, x, train=False)
+        lg = lg.astype(jnp.float32)
+        logits_sum = lg if logits_sum is None else logits_sum + lg
+        if with_bn_stats:
+            all_stats.append(stats)
+    avg = logits_sum / len(specs)
+    if with_bn_stats:
+        return avg, all_stats
+    return avg
+
+
+def split_clients(clients: Sequence[Client]):
+    """-> (static spec tuple, traced params list)."""
+    return tuple(c.spec for c in clients), [c.params for c in clients]
+
+
+def stack_homogeneous(clients: Sequence[Client]):
+    """Stack same-architecture client params for a vmapped ensemble."""
+    specs = {c.spec for c in clients}
+    assert len(specs) == 1, "stack_homogeneous requires identical specs"
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[c.params for c in clients])
+    return clients[0].spec, stacked
+
+
+def ensemble_logits_stacked(spec: CNNSpec, stacked: dict, x: jnp.ndarray):
+    """Vmapped homogeneous ensemble — one batched forward instead of m."""
+    def one(p):
+        return cnn_apply(p, spec, x, train=False)[0].astype(jnp.float32)
+    return jnp.mean(jax.vmap(one)(stacked), axis=0)

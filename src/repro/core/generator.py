@@ -1,0 +1,103 @@
+"""Generators for the DENSE data-generation stage.
+
+``img_generator_*`` — DCGAN-style conv generator (DAFL [2] architecture, as
+used by the paper, §3.1.4): fc → BN → 2×(upsample, conv, BN, lrelu) → conv
+→ tanh. Generator BN layers always use batch statistics (no running stats).
+
+``tok_generator_*`` — the LM-family analogue (DESIGN.md §7.4): a light
+transformer that maps (z, y) to a sequence of *soft embeddings* consumed by
+decoder-LM clients via ``forward(..., embeds=...)``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------- image path --
+
+def _gbn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _gbn(p, x, eps=1e-5):
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axes)
+    var = jnp.var(x, axes)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def img_generator_init(key, *, nz: int = 100, img_size: int = 32,
+                       out_ch: int = 3, base: int = 64) -> dict:
+    s0 = img_size // 4
+    ks = jax.random.split(key, 4)
+    return {
+        "fc": L.linear_init(ks[0], nz, 2 * base * s0 * s0, bias=True),
+        "bn0": _gbn_init(2 * base),
+        "c1": L.conv_init(ks[1], 2 * base, 2 * base, 3),
+        "bn1": _gbn_init(2 * base),
+        "c2": L.conv_init(ks[2], 2 * base, base, 3),
+        "bn2": _gbn_init(base),
+        "c3": L.conv_init(ks[3], base, out_ch, 3),
+    }
+
+
+def img_generator(p: dict, z: jnp.ndarray, *, img_size: int,
+                  base: int = 64) -> jnp.ndarray:
+    """z: (B, nz) -> images (B, H, W, C) in (-1, 1)."""
+    B = z.shape[0]
+    s0 = img_size // 4
+    x = L.linear(p["fc"], z).reshape(B, s0, s0, 2 * base)
+    x = _gbn(p["bn0"], x)
+    x = jax.image.resize(x, (B, 2 * s0, 2 * s0, 2 * base), "nearest")
+    x = jax.nn.leaky_relu(_gbn(p["bn1"], L.conv2d(p["c1"], x)), 0.2)
+    x = jax.image.resize(x, (B, img_size, img_size, 2 * base), "nearest")
+    x = jax.nn.leaky_relu(_gbn(p["bn2"], L.conv2d(p["c2"], x)), 0.2)
+    return jnp.tanh(L.conv2d(p["c3"], x))
+
+
+# ---------------------------------------------------------------- LM path --
+
+def tok_generator_init(key, *, nz: int = 64, seq: int = 64, d_model: int,
+                       d_g: int = 256, n_blocks: int = 2,
+                       n_classes: int = 0) -> dict:
+    """n_classes > 0 adds a label-conditioning table (class-conditional
+    synthesis, mirroring the paper's random one-hot y)."""
+    ks = jax.random.split(key, 3 + 2 * n_blocks)
+    p = {
+        "pos": (jax.random.normal(ks[0], (seq, d_g)) * 0.02).astype(jnp.float32),
+        "z_proj": L.linear_init(ks[1], nz, d_g, bias=True),
+        "out": L.linear_init(ks[2], d_g, d_model, bias=True),
+        "blocks": [],
+    }
+    if n_classes:
+        p["label"] = L.embed_init(ks[-1], n_classes, d_g)
+    for i in range(n_blocks):
+        k1, k2 = ks[3 + 2 * i], ks[4 + 2 * i]
+        p["blocks"].append({
+            "norm1": L.layernorm_init(d_g),
+            "mix": L.linear_init(k1, seq, seq, bias=True),   # token mixer
+            "norm2": L.layernorm_init(d_g),
+            "mlp": L.gelu_mlp_init(k2, d_g, 4 * d_g),
+        })
+    return p
+
+
+def tok_generator(p: dict, z: jnp.ndarray,
+                  labels: jnp.ndarray | None = None) -> jnp.ndarray:
+    """z: (B, nz) -> soft embeddings (B, S, d_model)."""
+    h = L.linear(p["z_proj"], z)[:, None, :] + p["pos"][None]
+    if labels is not None and "label" in p:
+        h = h + L.embed(p["label"], labels)[:, None, :]
+    for blk in p["blocks"]:
+        y = L.layernorm(blk["norm1"], h)
+        y = jnp.swapaxes(L.linear(blk["mix"], jnp.swapaxes(y, 1, 2)), 1, 2)
+        h = h + y
+        h = h + L.gelu_mlp(blk["mlp"], L.layernorm(blk["norm2"], h))
+    return L.linear(p["out"], h)

@@ -1,0 +1,68 @@
+"""The DENSE loss functions (paper §2.2–2.3).
+
+  L_CE  (Eq. 2)  similarity      — CE(D(x̂), y) on ensemble-average logits
+  L_BN  (Eq. 3)  stability       — match client BN batch stats to running
+  L_div (Eq. 4)  transferability — maximize teacher/student KL only where
+                                   their argmax predictions disagree
+  L_gen (Eq. 5)  = L_CE + λ1 L_BN + λ2 L_div
+  L_dis (Eq. 6)  distillation    — KL(D(x̂) ‖ f_S(x̂))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_kl(p_logits: jnp.ndarray, q_logits: jnp.ndarray,
+               temperature: float = 1.0) -> jnp.ndarray:
+    """Per-sample KL( softmax(p/T) ‖ softmax(q/T) ), shape (B,)."""
+    pl = p_logits.astype(jnp.float32) / temperature
+    ql = q_logits.astype(jnp.float32) / temperature
+    logp = jax.nn.log_softmax(pl, axis=-1)
+    logq = jax.nn.log_softmax(ql, axis=-1)
+    return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
+
+
+def ce_loss(avg_logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (2)."""
+    logp = jax.nn.log_softmax(avg_logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+
+def bn_loss(per_client_stats) -> jnp.ndarray:
+    """Eq. (3): (1/m) Σ_k Σ_l ‖μ_l(x̂) − μ_{k,l}‖ + ‖σ²_l(x̂) − σ²_{k,l}‖."""
+    total = jnp.zeros((), jnp.float32)
+    for stats in per_client_stats:            # one list per client
+        for s in stats:                       # one dict per BN layer
+            total = total + jnp.linalg.norm(s["mean"] - s["running_mean"]) \
+                + jnp.linalg.norm(s["var"] - s["running_var"])
+    return total / max(len(per_client_stats), 1)
+
+
+def div_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
+             temperature: float = 1.0) -> jnp.ndarray:
+    """Eq. (4): −ω·KL(D‖f_S); ω = 1[argmax D ≠ argmax f_S].
+
+    Returned value is the loss to *minimize* (already negated); gradients
+    flow to the generator through both logit tensors.
+    """
+    omega = (jnp.argmax(avg_logits, -1)
+             != jnp.argmax(student_logits, -1)).astype(jnp.float32)
+    kl = softmax_kl(avg_logits, student_logits, temperature)
+    return -jnp.mean(omega * kl)
+
+
+def gen_loss(avg_logits, labels, per_client_stats, student_logits, *,
+             lambda_bn: float, lambda_div: float):
+    """Eq. (5). Returns (total, dict of parts)."""
+    l_ce = ce_loss(avg_logits, labels)
+    l_bn = bn_loss(per_client_stats)
+    l_div = div_loss(avg_logits, student_logits)
+    total = l_ce + lambda_bn * l_bn + lambda_div * l_div
+    return total, {"ce": l_ce, "bn": l_bn, "div": l_div}
+
+
+def distill_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
+                 temperature: float = 1.0) -> jnp.ndarray:
+    """Eq. (6): mean_b KL(D(x̂) ‖ f_S(x̂))."""
+    return jnp.mean(softmax_kl(avg_logits, student_logits, temperature))

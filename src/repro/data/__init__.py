@@ -1,0 +1,6 @@
+from repro.data.synthetic import make_classification_data, make_lm_data
+from repro.data.partition import dirichlet_partition, class_counts
+from repro.data.pipeline import batches, lm_batches
+
+__all__ = ["make_classification_data", "make_lm_data",
+           "dirichlet_partition", "class_counts", "batches", "lm_batches"]

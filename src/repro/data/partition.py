@@ -1,0 +1,36 @@
+"""Dirichlet non-IID partitioning (paper §3.1.2).
+
+For each class k, sample p_k ~ Dir(alpha) over clients and allocate a
+p_k^i fraction of class-k examples to client i. Small alpha => highly
+skewed (some clients see few / no examples of a class).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
+                        seed: int = 0, min_size: int = 2):
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    while True:
+        idx_per_client = [[] for _ in range(n_clients)]
+        for k in range(n_classes):
+            idx_k = np.where(labels == k)[0]
+            rng.shuffle(idx_k)
+            p = rng.dirichlet([alpha] * n_clients)
+            cuts = (np.cumsum(p) * len(idx_k)).astype(int)[:-1]
+            for i, part in enumerate(np.split(idx_k, cuts)):
+                idx_per_client[i].extend(part.tolist())
+        if min(len(ix) for ix in idx_per_client) >= min_size:
+            break
+    out = []
+    for ix in idx_per_client:
+        ix = np.asarray(ix)
+        rng.shuffle(ix)
+        out.append(ix)
+    return out
+
+
+def class_counts(labels: np.ndarray, idx: np.ndarray, n_classes: int):
+    return np.bincount(labels[idx], minlength=n_classes)

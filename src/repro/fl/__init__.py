@@ -1,0 +1,9 @@
+from repro.fl.client import local_update, make_local_step
+from repro.fl.fedavg import fedavg
+from repro.fl.protocol import CommLedger, build_federation, param_bytes
+from repro.fl.baselines import fed_df, fed_dafl, fed_adi, make_distill_step
+from repro.fl.multiround import dense_multi_round
+
+__all__ = ["local_update", "make_local_step", "fedavg", "CommLedger",
+           "build_federation", "param_bytes", "fed_df", "fed_dafl",
+           "fed_adi", "make_distill_step", "dense_multi_round"]

@@ -1,0 +1,161 @@
+"""One-shot FL baselines from the paper (§3.1.3).
+
+  FedDF    [37] — ensemble distillation on a transfer set. FedDF assumes an
+                  unlabeled proxy dataset; in the paper's data-free one-shot
+                  comparison no proxy exists, so it receives random-noise
+                  inputs (recorded adaptation, DESIGN.md §7).
+  Fed-DAFL [2]  — DAFL's GAN-based data-free KD applied to the ensemble:
+                  generator trained with one-hot CE + activation norm +
+                  information-entropy losses; no BN / boundary terms.
+  Fed-ADI  [57] — DeepInversion: optimize input batches directly with
+                  CE + BN-statistics + TV + L2 priors, then distill.
+
+All baselines share DENSE's distillation step (Eq. 6) and the same student
+budget — matching the paper's "same setting for all methods".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import losses as LS
+from repro.core.dense import merge_bn_stats
+from repro.core.ensemble import ensemble_logits, split_clients
+from repro.core import generator as G
+from repro.models.cnn import CNNSpec, cnn_apply, cnn_init
+
+
+def _student_spec(scfg) -> CNNSpec:
+    return CNNSpec(kind=scfg.global_kind, num_classes=scfg.num_classes,
+                   in_ch=scfg.in_ch, width=scfg.width,
+                   image_size=scfg.image_size)
+
+
+def make_distill_step(specs, student_spec: CNNSpec, scfg):
+    s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
+
+    @jax.jit
+    def step(stu_p, s_state, cparams, x):
+        avg = ensemble_logits(specs, cparams, x)
+
+        def loss_fn(sp):
+            logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
+            return LS.distill_loss(avg, logits), new_sp
+
+        (loss, stats_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(stu_p)
+        new_p, new_state = s_opt.update(grads, s_state, stu_p)
+        return merge_bn_stats(new_p, stats_p), new_state, loss
+
+    return step, s_opt
+
+
+# ------------------------------------------------------------------ FedDF --
+
+def fed_df(key, clients, scfg, student_spec: CNNSpec | None = None):
+    student_spec = student_spec or _student_spec(scfg)
+    specs, cparams = split_clients(clients)
+    k_s, key = jax.random.split(key)
+    stu_p = cnn_init(k_s, student_spec)
+    step, s_opt = make_distill_step(specs, student_spec, scfg)
+    s_state = s_opt.init(stu_p)
+    for _ in range(scfg.epochs):
+        for _ in range(getattr(scfg, "s_steps", 1)):
+            key, kx = jax.random.split(key)
+            x = jax.random.uniform(kx, (scfg.synth_batch, scfg.image_size,
+                                        scfg.image_size, scfg.in_ch),
+                                   jnp.float32, -1.0, 1.0)
+            stu_p, s_state, _ = step(stu_p, s_state, cparams, x)
+    return stu_p, student_spec
+
+
+# --------------------------------------------------------------- Fed-DAFL --
+
+def fed_dafl(key, clients, scfg, student_spec: CNNSpec | None = None, *,
+             alpha: float = 0.1, beta: float = 5.0):
+    student_spec = student_spec or _student_spec(scfg)
+    specs, cparams = split_clients(clients)
+    k_g, k_s, key = jax.random.split(key, 3)
+    gen_p = G.img_generator_init(k_g, nz=scfg.nz, img_size=scfg.image_size,
+                                 out_ch=scfg.in_ch)
+    stu_p = cnn_init(k_s, student_spec)
+    g_opt = optim.adam(scfg.g_lr)
+    g_state = g_opt.init(gen_p)
+    d_step, s_opt = make_distill_step(specs, student_spec, scfg)
+    s_state = s_opt.init(stu_p)
+
+    @jax.jit
+    def gen_step(gp, gs, cparams, z):
+        def loss_fn(gp):
+            x = G.img_generator(gp, z, img_size=scfg.image_size)
+            avg = ensemble_logits(specs, cparams, x)
+            pseudo = jnp.argmax(avg, -1)
+            l_oh = LS.ce_loss(avg, pseudo)                  # one-hot loss
+            l_a = -jnp.mean(jnp.abs(avg))                   # activation loss
+            mean_p = jnp.mean(jax.nn.softmax(avg, -1), 0)
+            l_ie = jnp.sum(mean_p * jnp.log(mean_p + 1e-8))  # -entropy
+            return l_oh + alpha * l_a + beta * l_ie
+
+        loss, grads = jax.value_and_grad(loss_fn)(gp)
+        new_p, new_s = g_opt.update(grads, gs, gp)
+        return new_p, new_s, loss
+
+    for _ in range(scfg.epochs):
+        key, kz = jax.random.split(key)
+        z = jax.random.normal(kz, (scfg.synth_batch, scfg.nz))
+        for _ in range(scfg.t_g):
+            gen_p, g_state, _ = gen_step(gen_p, g_state, cparams, z)
+        for _ in range(getattr(scfg, "s_steps", 1)):
+            x = jax.lax.stop_gradient(
+                G.img_generator(gen_p, z, img_size=scfg.image_size))
+            stu_p, s_state, _ = d_step(stu_p, s_state, cparams, x)
+            key, kz = jax.random.split(key)
+            z = jax.random.normal(kz, (scfg.synth_batch, scfg.nz))
+    return stu_p, student_spec
+
+
+# ---------------------------------------------------------------- Fed-ADI --
+
+def fed_adi(key, clients, scfg, student_spec: CNNSpec | None = None, *,
+            adi_lr: float = 0.05, tv_coef: float = 1e-4, l2_coef: float = 1e-5,
+            bn_coef: float = 1.0, refresh_every: int = 20):
+    student_spec = student_spec or _student_spec(scfg)
+    specs, cparams = split_clients(clients)
+    k_s, key = jax.random.split(key)
+    stu_p = cnn_init(k_s, student_spec)
+    d_step, s_opt = make_distill_step(specs, student_spec, scfg)
+    s_state = s_opt.init(stu_p)
+    x_opt = optim.adam(adi_lr)
+
+    @jax.jit
+    def adi_step(x, xs, cparams, y):
+        def loss_fn(x):
+            avg, stats = ensemble_logits(specs, cparams, x,
+                                         with_bn_stats=True)
+            l_ce = LS.ce_loss(avg, y)
+            l_bn = LS.bn_loss(stats)
+            dx = jnp.diff(x, axis=1)
+            dy = jnp.diff(x, axis=2)
+            l_tv = jnp.mean(dx * dx) + jnp.mean(dy * dy)
+            l_l2 = jnp.mean(x * x)
+            return l_ce + bn_coef * l_bn + tv_coef * l_tv + l2_coef * l_l2
+
+        loss, grads = jax.value_and_grad(loss_fn)(x)
+        new_x, new_s = x_opt.update(grads, xs, x)
+        return jnp.clip(new_x, -1.0, 1.0), new_s, loss
+
+    x = None
+    for epoch in range(scfg.epochs):
+        if x is None or epoch % refresh_every == 0:
+            key, kx, ky = jax.random.split(key, 3)
+            x = jax.random.normal(kx, (scfg.synth_batch, scfg.image_size,
+                                       scfg.image_size, scfg.in_ch)) * 0.5
+            y = jax.random.randint(ky, (scfg.synth_batch,), 0,
+                                   scfg.num_classes)
+            x_state = x_opt.init(x)
+        for _ in range(scfg.t_g):
+            x, x_state, _ = adi_step(x, x_state, cparams, y)
+        for _ in range(getattr(scfg, "s_steps", 1)):
+            stu_p, s_state, _ = d_step(stu_p, s_state, cparams,
+                                       jax.lax.stop_gradient(x))
+    return stu_p, student_spec

@@ -1,0 +1,55 @@
+"""Client-side LocalUpdate (paper §3.1.4: SGD, lr=0.01, momentum=0.9,
+b=128, E epochs; optionally LDAM [1] for imbalanced local data)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.dense import merge_bn_stats
+from repro.data.pipeline import batches
+from repro.models.cnn import CNNSpec, cnn_apply
+
+
+def make_local_step(spec: CNNSpec, *, lr, momentum, use_ldam=False):
+    opt = optim.sgd(lr, momentum=momentum)
+
+    @jax.jit
+    def step(params, state, x, y, margins):
+        def loss_fn(p):
+            logits, new_p, _ = cnn_apply(p, spec, x, train=True)
+            if use_ldam:
+                loss = optim.ldam_loss(logits, y, margins)
+            else:
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+            return loss, new_p
+
+        (loss, stats_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_state = opt.update(grads, state, params)
+        new_p = merge_bn_stats(new_p, stats_p)
+        return new_p, new_state, loss
+
+    return step, opt
+
+
+def local_update(params, spec: CNNSpec, x: np.ndarray, y: np.ndarray, *,
+                 epochs: int, lr: float = 0.01, momentum: float = 0.9,
+                 batch_size: int = 128, use_ldam: bool = False,
+                 num_classes: int = 10, seed: int = 0):
+    """Train a client's model on its local shard. Returns (params, info)."""
+    counts = np.bincount(y, minlength=num_classes)
+    margins = optim.class_margins(jnp.asarray(counts)) if use_ldam \
+        else jnp.zeros((num_classes,))
+    step, opt = make_local_step(spec, lr=lr, momentum=momentum,
+                                use_ldam=use_ldam)
+    state = opt.init(params)
+    losses = []
+    for bx, by in batches(x, y, batch_size, seed=seed, epochs=epochs):
+        params, state, loss = step(params, state, jnp.asarray(bx),
+                                   jnp.asarray(by), margins)
+        losses.append(float(loss))
+    return params, {"loss": losses, "class_counts": counts}

@@ -1,0 +1,26 @@
+"""FedAvg aggregation [44] — the paper's primary baseline (homogeneous
+models only; Table 2 omits it for heterogeneous federations)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ensemble import Client
+
+
+def fedavg(clients: Sequence[Client]) -> dict:
+    """theta_S = sum_k (n_k / n) theta^k."""
+    kinds = {c.spec for c in clients}
+    if len(kinds) != 1:
+        raise ValueError("FedAvg requires homogeneous client models; got "
+                         f"{[c.spec.kind for c in clients]}")
+    n = sum(c.n_data for c in clients)
+    ws = [c.n_data / n for c in clients]
+
+    def avg(*leaves):
+        acc = sum(w * leaf.astype(jnp.float32) for w, leaf in zip(ws, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *[c.params for c in clients])

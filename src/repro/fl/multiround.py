@@ -1,0 +1,54 @@
+"""Multi-round extension of DENSE (paper §3.3.4, Table 5).
+
+Homogeneous clients only (the server must broadcast one global model back).
+Round r: clients warm-start from the round-(r-1) global model, train E
+epochs locally, upload; the server runs DENSE (student warm-started from
+the previous global) and broadcasts.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.dense import train_dense_server
+from repro.core.ensemble import Client
+from repro.data.partition import dirichlet_partition
+from repro.fl.client import local_update
+from repro.fl.protocol import CommLedger, param_bytes
+from repro.models.cnn import CNNSpec, cnn_init
+
+
+def dense_multi_round(key, scfg, data, *, rounds: int,
+                      ledger: CommLedger | None = None, eval_fn=None,
+                      seed: int = 0):
+    x, y = data["train"]
+    parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
+    spec = CNNSpec(kind=scfg.global_kind, num_classes=scfg.num_classes,
+                   in_ch=scfg.in_ch, width=scfg.width,
+                   image_size=scfg.image_size)
+    keys = jax.random.split(key, scfg.n_clients + rounds + 1)
+    global_p = None
+    accs = []
+    for r in range(rounds):
+        clients = []
+        for i, idx in enumerate(parts):
+            p0 = global_p if global_p is not None else cnn_init(keys[i], spec)
+            p, info = local_update(
+                p0, spec, x[idx], y[idx], epochs=scfg.local_epochs,
+                lr=scfg.local_lr, momentum=scfg.local_momentum,
+                batch_size=scfg.batch_size, num_classes=scfg.num_classes,
+                seed=seed * 1000 + r * 100 + i)
+            if ledger is not None:
+                ledger.record("up", f"client{i}", param_bytes(p),
+                              f"round{r}-model-upload")
+            clients.append(Client(spec=spec, params=p, n_data=len(idx),
+                                  class_counts=info["class_counts"]))
+        global_p, _, _ = train_dense_server(
+            keys[scfg.n_clients + r], clients, scfg, spec,
+            student_params=global_p)
+        if ledger is not None and r + 1 < rounds:
+            for i in range(scfg.n_clients):
+                ledger.record("down", f"client{i}", param_bytes(global_p),
+                              f"round{r}-broadcast")
+        if eval_fn is not None:
+            accs.append(eval_fn(global_p, spec))
+    return global_p, spec, accs

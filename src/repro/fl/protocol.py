@@ -1,0 +1,76 @@
+"""One-shot FL protocol orchestration + communication accounting.
+
+The whole point of one-shot FL is the communication profile: exactly one
+unidirectional client->server model upload. ``CommLedger`` records every
+transfer so tests can assert the one-shot property (m uploads, zero
+broadcasts) and benchmarks can compare against multi-round FedAvg
+(2 * m * rounds transfers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.ensemble import Client
+from repro.data.partition import dirichlet_partition
+from repro.fl.client import local_update
+from repro.models.cnn import CNNSpec, cnn_init
+
+
+def param_bytes(tree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+@dataclass
+class CommLedger:
+    events: list = field(default_factory=list)
+
+    def record(self, direction: str, who: str, nbytes: int, what: str):
+        assert direction in ("up", "down")
+        self.events.append({"dir": direction, "who": who,
+                            "bytes": int(nbytes), "what": what})
+
+    @property
+    def uplink_bytes(self) -> int:
+        return sum(e["bytes"] for e in self.events if e["dir"] == "up")
+
+    @property
+    def downlink_bytes(self) -> int:
+        return sum(e["bytes"] for e in self.events if e["dir"] == "down")
+
+    @property
+    def rounds(self) -> int:
+        """Number of distinct up-transfer phases (communication rounds)."""
+        return len({e["what"] for e in self.events if e["dir"] == "up"})
+
+
+def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
+                     seed: int = 0):
+    """Partition data (Dirichlet, §3.1.2), train every client locally,
+    and 'upload' the models: the one communication round of DENSE.
+
+    Returns (clients, shards) where shards[i] = (x_i, y_i).
+    """
+    x, y = data["train"]
+    parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
+    clients, shards = [], []
+    keys = jax.random.split(key, scfg.n_clients)
+    for i, idx in enumerate(parts):
+        spec = CNNSpec(kind=scfg.client_kinds[i % len(scfg.client_kinds)],
+                       num_classes=scfg.num_classes, in_ch=scfg.in_ch,
+                       width=scfg.width, image_size=scfg.image_size)
+        params = cnn_init(keys[i], spec)
+        params, info = local_update(
+            params, spec, x[idx], y[idx], epochs=scfg.local_epochs,
+            lr=scfg.local_lr, momentum=scfg.local_momentum,
+            batch_size=scfg.batch_size, use_ldam=scfg.use_ldam,
+            num_classes=scfg.num_classes, seed=seed + i)
+        if ledger is not None:
+            ledger.record("up", f"client{i}", param_bytes(params),
+                          "round0-model-upload")
+        clients.append(Client(spec=spec, params=params, n_data=len(idx),
+                              class_counts=info["class_counts"]))
+        shards.append((x[idx], y[idx]))
+    return clients, shards

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ref.py and a jitted wrapper in ops.py:
+
+  flash_attention — blockwise online-softmax attention (GQA + window)
+  ssd_scan        — Mamba-2 SSD chunked scan (intra-chunk MXU matmuls +
+                    VMEM-resident inter-chunk state)
+  distill_kl      — fused large-vocab KL for DENSE's distillation stage
+"""
+from repro.kernels.ops import (flash_attention, ssd_scan, distill_kl,
+                               distill_kl_mean)
+from repro.kernels import ref
+
+__all__ = ["flash_attention", "ssd_scan", "distill_kl", "distill_kl_mean",
+           "ref"]

@@ -1,0 +1,118 @@
+"""Blockwise (flash) attention Pallas TPU kernel.
+
+Online-softmax attention with GQA and sliding-window support. VMEM
+footprint per grid step is O(bq*D + bk*D + bq*bk) instead of O(Sq*Sk).
+
+TPU adaptation notes (DESIGN.md §3): running max/denominator and the
+output accumulator live in *revisited output blocks* — their index maps
+ignore the k-block grid axis, so Pallas keeps them resident in VMEM across
+the innermost loop (the TPU-idiomatic replacement for CUDA shared-memory
+accumulators). Block sizes default to MXU-friendly multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, bq: int, bk: int, nk: int, causal: bool,
+                  window: int, seq_off: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    i = pl.program_id(1)
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + seq_off
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]                                    # (bq,)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    o_ref[0] = o_ref[0] * alpha[:, None] \
+        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+
+    GQA handled by the k/v index maps (Hq = g * Hkv). ``window`` keeps
+    keys with q_pos - k_pos < window (q tokens are the last Sq of Sk).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    if scale is None:
+        scale = float(1.0 / (D ** 0.5))
+
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        return ((bh // Hq) * Hkv + (bh % Hq) // g, j, 0)
+
+    def o_map(bh, i, j):
+        return (bh, i, 0)
+
+    def ml_map(bh, i, j):
+        return (bh, i)
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                          causal=causal, window=window, seq_off=Sk - Sq),
+        grid=(B * Hq, nq, nk),
+        in_specs=[pl.BlockSpec((1, bq, D), q_map),
+                  pl.BlockSpec((1, bk, D), kv_map),
+                  pl.BlockSpec((1, bk, D), kv_map)],
+        out_specs=[pl.BlockSpec((1, bq, D), o_map),
+                   pl.BlockSpec((1, bq), ml_map),
+                   pl.BlockSpec((1, bq), ml_map)],
+        out_shape=[jax.ShapeDtypeStruct((B * Hq, Sq, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B * Hq, Sq), jnp.float32),
+                   jax.ShapeDtypeStruct((B * Hq, Sq), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python) — correctness-validated against the
+``ref.py`` oracles; on TPU they compile to Mosaic. ``interpret`` defaults
+to auto-detection of the backend.
+
+``distill_kl`` carries a custom VJP: the forward pass is the fused online
+kernel; the backward pass uses the analytic gradients
+  d/ds = softmax(s) − softmax(t),  d/dt = p ⊙ ((t−lse_t) − (s−lse_s) − KL)
+evaluated in jnp (a fused backward kernel is a recorded §Perf follow-up).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import distill_kl as _kl
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=None):
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                         interpret=_auto_interpret(interpret))
+
+
+# ------------------------------------------------- distill_kl + custom VJP
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def distill_kl(teacher_logits, student_logits, block_rows=256, block_v=2048,
+               interpret=None):
+    return _kl.distill_kl(teacher_logits, student_logits,
+                          block_rows=block_rows, block_v=block_v,
+                          interpret=_auto_interpret(interpret))
+
+
+def _kl_fwd(t, s, block_rows, block_v, interpret):
+    kl = distill_kl(t, s, block_rows, block_v, interpret)
+    return kl, (t, s, kl)
+
+
+def _kl_bwd(block_rows, block_v, interpret, res, g):
+    t, s, kl = res
+    tf, sf = t.astype(jnp.float32), s.astype(jnp.float32)
+    logp = jax.nn.log_softmax(tf, axis=-1)
+    logq = jax.nn.log_softmax(sf, axis=-1)
+    p, q = jnp.exp(logp), jnp.exp(logq)
+    ds = (q - p) * g[:, None]
+    dt = p * (logp - logq - kl[:, None]) * g[:, None]
+    return dt.astype(t.dtype), ds.astype(s.dtype)
+
+
+distill_kl.defvjp(_kl_fwd, _kl_bwd)
+
+
+def distill_kl_mean(teacher_logits, student_logits, **kw):
+    """Scalar mean-KL convenience (Eq. 6 over a flattened token batch)."""
+    r = distill_kl(teacher_logits, student_logits, **kw)
+    return jnp.mean(r)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle uses the most *direct* formulation (materialized softmax,
+step-by-step recurrence) so kernel tests compare two genuinely different
+algorithms, not two copies of one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+# -------------------------------------------------------- flash attention --
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: float | None = None):
+    """Materialized-softmax attention (the O(S^2)-memory reference).
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). GQA: Hq a multiple of Hkv.
+    window w > 0 keeps keys with q_pos - k_pos < w (absolute positions
+    assume q tokens are the last Sq of the Sk context).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------- ssd scan --
+
+def ssd(x, dt, a, b, c, *, initial_state=None):
+    """Step-by-step SSM recurrence (the O(S) sequential reference).
+
+    x: (B,S,H,P), dt: (B,S,H), a: (H,), b/c: (B,S,G,N).
+    s_t = exp(dt_t a) s_{t-1} + dt_t * (b_t ⊗ x_t);  y_t = c_t · s_t.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, t):
+        xt, dtt, bt, ct = t
+        da = jnp.exp(dtt * a[None, :])                       # (B,H)
+        s = s * da[..., None, None] \
+            + jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bb, 1, 0), jnp.moveaxis(cc, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+# ------------------------------------------------------------- distill KL --
+
+def distill_kl(teacher_logits, student_logits):
+    """Per-row KL(softmax(t) ‖ softmax(s)) with materialized softmaxes.
+
+    (R, V) -> (R,) in float32.
+    """
+    t = teacher_logits.astype(jnp.float32)
+    s = student_logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(t, axis=-1)
+    logq = jax.nn.log_softmax(s, axis=-1)
+    return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)

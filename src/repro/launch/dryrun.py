@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers and compiles on the production mesh, and extract the
+roofline terms from the compiled artifact.
+
+No arrays are ever allocated: parameters, optimizer state and inputs are
+ShapeDtypeStructs; ``jit(...).lower(...).compile()`` exercises SPMD
+partitioning, layout assignment and the collective schedule exactly as a
+real launch would.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, available_archs, get_config
+from repro.launch import shardings as SH
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum per-device result bytes of every collective in partitioned HLO."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLL_RE.finditer(hlo):
+        dt, dims, op = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        out[op] += n * _DTYPE_BYTES[dt]
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def depth_pair(cfg: ArchConfig) -> tuple[int, int]:
+    """Two small valid depths for the unrolled cost-extrapolation.
+
+    XLA's cost_analysis counts a scanned (while-loop) body ONCE, so the
+    full scanned compile under-reports FLOPs/bytes/collectives by ~L x.
+    We therefore compile two small *unrolled* depth variants and linearly
+    extrapolate every per-layer cost to the full depth; the full scanned
+    compile remains the lowering/fit proof.
+    """
+    if cfg.family == "hybrid":
+        u = cfg.attn_every              # one superblock = u mamba + shared
+        return u, 2 * u
+    if cfg.family == "vlm":
+        u = cfg.cross_every + 1         # one superblock = self x4 + cross
+        return u, 2 * u
+    return 2, 4
+
+
+def _shrink(cfg: ArchConfig, n_layers: int) -> ArchConfig:
+    return cfg.replace(n_layers=n_layers, scan_layers=False)
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (all chips)."""
+    sh = SP.SHAPES[shape_name]
+    n = cfg.active_param_count()
+    tokens = sh["batch"] * (sh["seq"] if sh["kind"] != "decode" else 1)
+    mult = 6 if sh["kind"] == "train" else 2
+    return float(mult) * n * tokens
+
+
+def build_lowerable(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns (jitted_fn, abstract_args) for the (arch, shape) cell."""
+    sh = SP.SHAPES[shape_name]
+    spec = SP.input_specs(cfg, shape_name)
+    aparams = SP.abstract_params(cfg)
+    pspecs = SH.param_specs(cfg, aparams, mesh)
+    bspec = SH.batch_specs(mesh, sh["batch"])
+
+    if sh["kind"] == "train":
+        astate = ST.abstract_train_state(cfg)
+        sspecs = {
+            "params": pspecs,
+            "opt": {"m": SH.zero1_specs(pspecs, aparams, mesh),
+                    "v": SH.zero1_specs(pspecs, aparams, mesh),
+                    "t": P()},
+            "step": P(),
+        }
+        bspecs = {k: P(bspec, *([None] * (v.ndim - 1)))
+                  for k, v in spec["batch_inputs"].items()}
+        fn = ST.make_train_step(cfg, mesh)
+        jf = jax.jit(fn,
+                     in_shardings=(SH.to_named(sspecs, mesh),
+                                   SH.to_named(bspecs, mesh)),
+                     donate_argnums=(0,))
+        return jf, (astate, spec["batch_inputs"])
+
+    cspecs = SH.cache_specs(cfg, spec["cache"], mesh, batch=sh["batch"])
+    tok_spec = P(bspec, None)
+    if sh["kind"] == "prefill":
+        fn = ST.make_prefill_step(cfg, mesh)
+        args = [aparams, spec["cache"], spec["tokens"]]
+        in_sh = [SH.to_named(pspecs, mesh), SH.to_named(cspecs, mesh),
+                 NamedSharding(mesh, tok_spec)]
+        if cfg.family == "vlm":
+            args.append(spec["vision"])
+            in_sh.append(NamedSharding(mesh, P(bspec, None, None)))
+        jf = jax.jit(fn, in_shardings=tuple(in_sh), donate_argnums=(1,))
+        return jf, tuple(args)
+
+    fn = ST.make_serve_step(cfg, mesh)
+    args = [aparams, spec["cache"], spec["tokens"], spec["pos"]]
+    in_sh = [SH.to_named(pspecs, mesh), SH.to_named(cspecs, mesh),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())]
+    if cfg.family == "vlm":
+        args.append(spec["vision"])
+        in_sh.append(NamedSharding(mesh, P(bspec, None, None)))
+    jf = jax.jit(fn, in_shardings=tuple(in_sh), donate_argnums=(1,))
+    return jf, tuple(args)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             keep_hlo: bool = False, mesh_shape: str | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": mesh_shape or ("2x16x16" if multi_pod else "16x16")}
+    if cfg_overrides:
+        rec["cfg_overrides"] = {k: str(v) for k, v in cfg_overrides.items()}
+    if shape_name == "long_500k" and not SP.long_context_ok(cfg):
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: long_500k requires a "
+                         "sub-quadratic path (DESIGN.md §5)")
+        return rec
+
+    if mesh_shape:  # §Perf: alternate logical meshes over the same chips
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(
+            dims, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        jf, args = build_lowerable(cfg, shape_name, mesh)
+        with mesh:
+            lowered = jf.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        return rec
+
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_per_device": (ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    rec["raw_scanned"] = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(hlo),
+    }
+
+    # --- trip-count-correct costs via unrolled depth extrapolation -----
+    def cell_costs(cfg_v):
+        jf_v, args_v = build_lowerable(cfg_v, shape_name, mesh)
+        with mesh:
+            c_v = jf_v.lower(*args_v).compile()
+        ca_v = c_v.cost_analysis()
+        cb_v = collective_bytes(c_v.as_text())
+        return {"flops": float(ca_v.get("flops", 0.0)),
+                "bytes": float(ca_v.get("bytes accessed", 0.0)),
+                "coll": float(cb_v["total"]),
+                "coll_by_op": cb_v}
+
+    try:
+        l1, l2 = depth_pair(cfg)
+        c1 = cell_costs(_shrink(cfg, l1))
+        c2 = cell_costs(_shrink(cfg, l2))
+        L = cfg.n_layers
+
+        def extr(k):
+            slope = (c2[k] - c1[k]) / (l2 - l1)
+            return max(c1[k] + (L - l1) * slope, c1[k])
+
+        flops_dev = extr("flops")
+        bytes_dev = extr("bytes")
+        coll_total = extr("coll")
+        coll = {op: max(c1["coll_by_op"][op]
+                        + (L - l1) * (c2["coll_by_op"][op]
+                                      - c1["coll_by_op"][op]) / (l2 - l1),
+                        0.0)
+                for op in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute")}
+        coll["total"] = coll_total
+        rec["cost_extrapolation"] = {"depths": [l1, l2], "full_depth": L,
+                                     "small": c1, "big": c2}
+    except Exception as e:   # fall back to raw scanned numbers
+        rec["cost_extrapolation"] = {"error": f"{type(e).__name__}: {e}"[:500]}
+        flops_dev = rec["raw_scanned"]["flops_per_device"]
+        bytes_dev = rec["raw_scanned"]["bytes_per_device"]
+        coll = rec["raw_scanned"]["collectives"]
+
+    rec["hlo_flops_per_device"] = flops_dev
+    rec["hlo_bytes_per_device"] = bytes_dev
+    rec["collectives"] = coll
+
+    mf = model_flops(cfg, shape_name)
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = float(coll["total"]) / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    rec["roofline"] = terms
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["model_flops_total"] = mf
+    rec["useful_flops_ratio"] = (mf / (flops_dev * chips)
+                                 if flops_dev else 0.0)
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+    return rec
+
+
+def run_dense_distill_cell(*, multi_pod: bool = False,
+                           arch: str = "llama3-2-3b",
+                           batch: int = 64, seq: int = 512,
+                           chunked_kl: bool = False) -> dict:
+    """The paper-representative production cell: DENSE stage-2 ensemble
+    distillation. The homogeneous client stack's leading (ensemble) dim is
+    sharded over the pod axis on the two-pod mesh — the logit average
+    D(x̂) lowers to one cross-pod all-reduce (DESIGN.md §6)."""
+    from repro.core import dense_llm as DL
+    from repro.launch import shardings as SH
+
+    cfg = get_config(arch).replace(scan_layers=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    n_clients = mesh.shape["pod"] if multi_pod else 2
+    rec = {"arch": f"dense-distill-{arch}", "shape": f"b{batch}_s{seq}",
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_clients": n_clients, "chunked_kl": chunked_kl}
+    try:
+        state, stacked, embeds = DL.abstract_pod_inputs(
+            cfg, n_clients=n_clients, batch=batch, seq=seq)
+        aparams = SP.abstract_params(cfg)
+        pspecs = SH.param_specs(cfg, aparams, mesh)
+        # client stack: ensemble dim over 'pod' (multi-pod) else replicated
+        ens_axis = "pod" if multi_pod else None
+        cspecs = jax.tree_util.tree_map(
+            lambda s: P(ens_axis, *s), pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        sspecs = {"params": pspecs,
+                  "opt": {"m": SH.zero1_specs(pspecs, aparams, mesh),
+                          "v": SH.zero1_specs(pspecs, aparams, mesh),
+                          "t": P()},
+                  "step": P()}
+        espec = P("data", None, None)
+        step = DL.make_pod_distill_step(cfg, mesh, n_clients=n_clients,
+                                        chunked_kl=chunked_kl)
+        jf = jax.jit(step,
+                     in_shardings=(SH.to_named(sspecs, mesh),
+                                   SH.to_named(cspecs, mesh),
+                                   NamedSharding(mesh, espec)),
+                     donate_argnums=(0,))
+        t0 = time.time()
+        with mesh:
+            compiled = jf.lower(state, stacked, embeds).compile()
+        rec["status"] = "ok"
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {"argument_bytes": ma.argument_size_in_bytes,
+                         "temp_bytes": ma.temp_size_in_bytes}
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        # scanned stack: scale per-layer costs (single scan over L layers
+        # dominates; embedding/logits once) — coarse L-scaling documented
+        rec["raw_scanned"] = {"flops_per_device": flops_dev,
+                              "bytes_per_device": bytes_dev,
+                              "collectives": coll}
+        terms = {"compute_s": flops_dev / PEAK_FLOPS_BF16,
+                 "memory_s": bytes_dev / HBM_BW,
+                 "collective_s": coll["total"] / ICI_BW}
+        rec["roofline_raw"] = terms
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["collectives"] = coll
+    except Exception as e:
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SP.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dense-distill", action="store_true",
+                    help="run the paper-representative DENSE stage-2 cell")
+    ap.add_argument("--mesh", default=None,
+                    help="alternate logical mesh over the same chips, "
+                         "e.g. 64x4 (axes data x model)")
+    ap.add_argument("--baseline-attn", action="store_true",
+                    help="disable blockwise attention (pre-§Perf baseline)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    if args.dense_distill:
+        os.makedirs(args.out, exist_ok=True)
+        chunked = os.environ.get("DENSE_CHUNKED_KL", "") == "1"
+        rec = run_dense_distill_cell(multi_pod=args.multi_pod,
+                                     chunked_kl=chunked)
+        tag = (f"dense-distill_{rec['shape']}"
+               f"{'_chunked' if chunked else ''}_"
+               f"{'2x16x16' if args.multi_pod else '16x16'}")
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: rec.get(k) for k in
+                          ("status", "compile_s", "bottleneck", "error")}))
+        return
+
+    archs = [args.arch] if args.arch else available_archs()
+    shapes = [args.shape] if args.shape else list(SP.SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+
+    overrides = {"use_blockwise_attn": False} if args.baseline_attn else None
+    for arch in archs:
+        for shape in shapes:
+            mesh_tag = args.mesh or ("2x16x16" if args.multi_pod else "16x16")
+            tag = f"{arch}_{shape}_{mesh_tag}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"skip {tag} (exists)")
+                continue
+            print(f"=== {tag} ===", flush=True)
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           mesh_shape=args.mesh, cfg_overrides=overrides)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            summary = {k: rec.get(k) for k in
+                       ("status", "compile_s", "bottleneck", "reason",
+                        "error")}
+            print(json.dumps(summary), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Two pods:   2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+carries pure data parallelism for training and doubles as the DENSE
+*ensemble* axis in the server loop (DESIGN.md §6).
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """A tiny mesh over whatever devices exist — for smoke tests."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,198 @@
+"""Parameter / activation / cache partitioning rules.
+
+Megatron-style 2D layout on (data|pod, model):
+  - embeddings + tied LM head: vocab sharded over `model`
+  - attention QKV/O: head-sharded over `model` *iff* both n_heads and
+    n_kv_heads divide the model-axis size; otherwise replicated (gemma3 has
+    8 q / 4 kv heads, phi3 40/10, llama 24/8 — none divide 16). Replicated
+    attention keeps the lowering correct; the memory cost is carried by
+    ZeRO-1 optimizer-state sharding over `data` (head-padding to a
+    shardable count is a §Perf hillclimb, see EXPERIMENTS.md).
+  - MLP up/gate column-, down row-sharded over `model`
+  - MoE experts expert-parallel over `model` (E % model == 0 for both
+    deepseek configs); router replicated
+  - Mamba2 z/x/dt projections head-sharded over `model` when the head
+    count divides (zamba2: 112 heads), else replicated (mamba2-130m: 24);
+    B/C group projections always replicated (G=1 shared state)
+  - optimizer moments: parameter spec + largest still-replicated dim
+    sharded over `data` (ZeRO-1)
+Batch dims shard over (pod, data); for global_batch=1 long-context decode
+the KV-cache *sequence* dim shards over `data` instead.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.configs.base import ArchConfig
+
+MP = "model"
+
+
+def _axis(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def attn_sharded(cfg: ArchConfig, mesh) -> bool:
+    m = _axis(mesh, MP)
+    if cfg.kv_lora_rank:
+        return cfg.n_heads % m == 0
+    return cfg.n_heads % m == 0 and cfg.n_kv_heads % m == 0
+
+
+def ssm_sharded(cfg: ArchConfig, mesh) -> bool:
+    m = _axis(mesh, MP)
+    return cfg.ssm_state > 0 and cfg.n_ssm_heads % m == 0
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh):
+    """PartitionSpec tree matching an (abstract) params tree."""
+    a_sh = attn_sharded(cfg, mesh)
+    s_sh = ssm_sharded(cfg, mesh)
+    m = _axis(mesh, MP)
+
+    def rule(path_keys, leaf):
+        keys = [getattr(pk, "key", str(pk)) for pk in path_keys]
+        path = "/".join(keys)
+        nd = len(leaf.shape)
+
+        def pad(spec):
+            return P(*([None] * (nd - len(spec)) + list(spec)))
+
+        if path.endswith("embed/table"):
+            return pad([MP, None]) if leaf.shape[-2] % m == 0 else pad([None, None])
+        # --- MoE experts (raw (E, d, f) arrays under .../moe/) ---
+        if "/moe/" in path or path.startswith("moe/"):
+            if keys[-1] in ("gate", "up", "down") and "shared" not in keys:
+                return pad([MP, None, None])
+            if "router" in keys:
+                return pad([None] * min(nd, 2))
+            if "shared" in keys:
+                if keys[-2] in ("gate", "up"):
+                    return pad([None, MP])
+                if keys[-2] == "down":
+                    return pad([MP, None])
+                return pad([None])
+        # --- attention ---
+        if any(k in ("attn", "xattn") for k in keys):
+            if not a_sh or "xattn" in keys:
+                return pad([None] * min(nd, 2))
+            last2 = keys[-2] if len(keys) >= 2 else ""
+            if last2 in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+                return pad([None, MP]) if keys[-1] == "w" else pad([MP])
+            if last2 == "wo":
+                return pad([MP, None]) if keys[-1] == "w" else pad([None])
+            return pad([None] * min(nd, 2))       # wq_a, wkv_a, norms, gate
+        # --- dense MLPs ---
+        if "mlp" in keys and keys[-1] == "w":
+            if keys[-2] in ("gate", "up"):
+                return pad([None, MP])
+            if keys[-2] == "down":
+                return pad([MP, None])
+        if keys[-1] == "mlp_gate":
+            return P()
+        # --- mamba ---
+        if "mamba" in keys:
+            if not s_sh:
+                return pad([None] * min(nd, 2))
+            last2 = keys[-2] if len(keys) >= 2 else ""
+            if last2 in ("in_z", "in_x", "in_dt") and keys[-1] == "w":
+                return pad([None, MP])
+            if last2 in ("in_z", "in_x", "in_dt") and keys[-1] == "b":
+                return pad([MP])
+            if last2 == "conv_x":
+                return pad([None, MP]) if keys[-1] == "w" else pad([MP])
+            if last2 == "out_proj" and keys[-1] == "w":
+                return pad([MP, None])
+            if keys[-1] in ("a_log", "dt_bias", "d_skip"):
+                return pad([MP])
+            if last2 == "norm":
+                return pad([MP])
+            return pad([None] * min(nd, 2))       # in_bc, conv_bc
+        return pad([None] * min(nd, 2))           # norms, biases, misc
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def zero1_specs(param_specs_tree, params_shape, mesh, *,
+                min_size: int = 1 << 16):
+    """Optimizer-moment specs: param spec + shard the largest
+    still-replicated dim over `data` (ZeRO-1)."""
+    dp = _axis(mesh, "data")
+
+    def rule(spec, leaf):
+        shape = leaf.shape
+        if int(np.prod(shape)) < min_size or dp == 1:
+            return spec
+        cur = list(spec) + [None] * (len(shape) - len(spec))
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if cur[i] is None and shape[i] % dp == 0 and shape[i] >= dp:
+                cur[i] = "data"
+                return P(*cur)
+        return spec
+
+    return jax.tree_util.tree_map(rule, param_specs_tree, params_shape)
+
+
+def batch_specs(mesh, batch: int):
+    """Token-batch sharding over every data-parallel axis that divides."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % size == 0:
+        return tuple(axes)
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, mesh, *, batch: int,
+                seq_shard_replicated_attn: bool = True):
+    """Spec tree for a decode KV/SSM cache (matches init_cache layout).
+
+    seq_shard_replicated_attn (§Perf-3): when attention weights are
+    replicated (head counts don't divide the model axis), shard the cache
+    *sequence* dim over `model` instead of holding a full replica per
+    device — decode then reads 1/model of the cache per chip and XLA
+    realizes the softmax over the sharded axis with scalar-sized
+    collectives (flash-decode style). False reproduces the baseline.
+    """
+    a_sh = attn_sharded(cfg, mesh)
+    s_sh = ssm_sharded(cfg, mesh)
+    bspec = batch_specs(mesh, batch)
+    # global_batch=1 long-context: shard the sequence dim over `data`
+    seq_spec = "data" if (bspec is None and "data" in mesh.axis_names) else None
+
+    def rule(path_keys, leaf):
+        keys = [getattr(pk, "key", str(pk)) for pk in path_keys]
+        nd = len(leaf.shape)
+
+        def pad(base):
+            return P(*([None] * (nd - len(base)) + base))
+
+        last = keys[-1]
+        if last in ("k", "v"):            # (B, S, kh, hd)
+            if a_sh:
+                return pad([bspec, seq_spec, MP, None])
+            if seq_shard_replicated_attn:
+                s_axes = (seq_spec, MP) if seq_spec else MP
+                return pad([bspec, s_axes, None, None])
+            return pad([bspec, seq_spec, None, None])
+        if last == "c_kv" or last == "k_rope":   # (B, S, r)
+            return pad([bspec, seq_spec, None])
+        if last == "ssm":                 # (B, H, P, N)
+            return pad([bspec, MP if s_sh else None, None, None])
+        if last == "conv_x":              # (B, K-1, di)
+            return pad([bspec, None, MP if s_sh else None])
+        if last == "conv_bc":
+            return pad([bspec, None, None])
+        return pad([None] * nd)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,74 @@
+"""Abstract input specs (ShapeDtypeStruct) for every assigned input shape —
+the dry-run's stand-ins: weak-type-correct, shardable, zero allocation.
+
+Shapes (assignment table):
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill (logits + cache)
+  decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1     -> serve_step, sub-quadratic
+                                                  archs only (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+# archs with a sub-quadratic / bounded-state decode path (DESIGN.md §5)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+LONG_OK_ARCHS = ("gemma3-4b",)          # sliding-window dense
+
+
+def long_context_ok(cfg: ArchConfig) -> bool:
+    return cfg.family in LONG_OK_FAMILIES or cfg.name in LONG_OK_ARCHS
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Abstract inputs for (arch, shape): a kwargs dict whose structure
+    matches what the corresponding step function expects."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    out: dict = {"kind": kind, "batch": B, "seq": S}
+
+    if kind == "train":
+        out["batch_inputs"] = {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            out["batch_inputs"]["vision"] = sds(
+                (B, cfg.n_patches, cfg.vision_dim), jnp.dtype(cfg.dtype))
+    elif kind == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S))
+        if cfg.family == "vlm":
+            out["vision"] = sds((B, cfg.n_patches, cfg.vision_dim),
+                                jnp.dtype(cfg.dtype))
+    else:  # decode: one new token against a seq-long cache
+        out["tokens"] = sds((B, 1), jnp.int32)
+        out["pos"] = sds((), jnp.int32)
+        out["cache"] = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+        if cfg.family == "vlm":
+            out["vision"] = sds((B, cfg.n_patches, cfg.vision_dim),
+                                jnp.dtype(cfg.dtype))
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,78 @@
+"""Jittable step functions (train / prefill / decode) shared by the real
+drivers (train.py, serve.py) and the multi-pod dry-run (dryrun.py)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import dp_axes_of
+from repro.models import transformer as T
+
+
+def make_train_state(key, cfg: ArchConfig, *, lr: float = 3e-4):
+    params = T.init_model(key, cfg)
+    opt = optim.adam(lr)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ArchConfig, *, lr: float = 3e-4):
+    return jax.eval_shape(
+        functools.partial(make_train_state, cfg=cfg, lr=lr),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, *, lr: float = 3e-4,
+                    clip: float = 1.0):
+    opt = optim.adam(lr)
+    dp = dp_axes_of(mesh) if mesh is not None else ()
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return T.loss_fn(p, cfg, batch, mesh=mesh, dp_axes=dp)
+
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        grads, gnorm = optim.clip_by_global_norm(grads, clip)
+        new_p, new_opt = opt.update(grads, state["opt"], state["params"])
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "ce": parts["ce"],
+                   "moe_aux": parts["moe_aux"], "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    dp = dp_axes_of(mesh) if mesh is not None else ()
+
+    def prefill_step(params, cache, tokens, vision=None):
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, new_cache, _ = T.forward(
+            params, cfg, tokens=tokens, positions=positions, cache=cache,
+            cache_pos=jnp.int32(0), vision=vision, mesh=mesh, dp_axes=dp,
+            remat=False)
+        return logits[:, -1:], new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None):
+    """One decode step: a single new token against a pre-filled cache."""
+    dp = dp_axes_of(mesh) if mesh is not None else ()
+
+    def serve_step(params, cache, tokens, pos, vision=None):
+        positions = pos[None].astype(jnp.int32)
+        logits, new_cache, _ = T.forward(
+            params, cfg, tokens=tokens, positions=positions, cache=cache,
+            cache_pos=pos, vision=vision, mesh=mesh, dp_axes=dp,
+            decode=True, remat=False)
+        return logits, new_cache
+
+    return serve_step

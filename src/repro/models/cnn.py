@@ -1,0 +1,177 @@
+"""CNN client-model zoo for the paper-faithful DENSE path.
+
+The paper's heterogeneous-FL experiment (Table 2) uses ResNet-18, two small
+CNNs, WRN-16-1 and WRN-40-1 on CIFAR10. All are provided here with a common
+functional interface; every BatchNorm records (batch μ/σ², running μ/σ²) so
+the DENSE generator's L_BN (Eq. 3, DeepInversion-style) can be computed.
+
+API:
+  spec = CNNSpec(kind=..., num_classes=..., width=...)
+  params = cnn_init(key, spec)
+  logits, new_params, bn_stats = cnn_apply(params, spec, x, train=...)
+    bn_stats: list of {"mean","var","running_mean","running_var"} per BN,
+    new_params: params with updated BN running stats (when train=True).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+KINDS = ("cnn1", "cnn2", "resnet18", "wrn16_1", "wrn40_1", "lenet")
+
+
+@dataclass(frozen=True)
+class CNNSpec:
+    kind: str = "cnn1"
+    num_classes: int = 10
+    in_ch: int = 3
+    width: float = 1.0          # channel multiplier (tests shrink it)
+    image_size: int = 32
+
+    def ch(self, c: int) -> int:
+        return max(4, int(round(c * self.width)))
+
+
+# ------------------------------------------------------------ primitives --
+
+def _cbr_init(key, c_in, c_out, ksize=3):
+    return {"conv": L.conv_init(key, c_in, c_out, ksize),
+            "bn": L.batchnorm_init(c_out)}
+
+
+def _cbr(p, x, stats, train, stride=1, relu=True):
+    pre = L.conv2d(p["conv"], x, stride=stride)
+    axes = tuple(range(pre.ndim - 1))
+    stats.append({"mean": jnp.mean(pre.astype(jnp.float32), axes),
+                  "var": jnp.var(pre.astype(jnp.float32), axes),
+                  "running_mean": p["bn"]["mean"],
+                  "running_var": p["bn"]["var"]})
+    y, upd = L.batchnorm(p["bn"], pre, train=train)
+    new_p = {"conv": p["conv"], "bn": {**p["bn"], **upd}}
+    return (jax.nn.relu(y) if relu else y), new_p
+
+
+# ------------------------------------------------------------- small CNNs --
+
+def _cnn_stack_init(key, spec: CNNSpec, chans):
+    ks = jax.random.split(key, len(chans) + 1)
+    layers = []
+    c_prev = spec.in_ch
+    for i, c in enumerate(chans):
+        layers.append(_cbr_init(ks[i], c_prev, spec.ch(c)))
+        c_prev = spec.ch(c)
+    feat = max(1, spec.image_size // (2 ** len(chans)))
+    fc = L.linear_init(ks[-1], c_prev * feat * feat, spec.num_classes, bias=True)
+    return {"layers": layers, "fc": fc}
+
+
+def _cnn_stack_apply(p, spec, x, train):
+    stats, new_layers = [], []
+    for lp in p["layers"]:
+        x, np_ = _cbr(lp, x, stats, train)
+        new_layers.append(np_)
+        if x.shape[1] > 1:           # stop pooling at 1x1 (tiny test images)
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    logits = L.linear(p["fc"], x)
+    return logits, {"layers": new_layers, "fc": p["fc"]}, stats
+
+
+# --------------------------------------------------------------- ResNet ----
+
+def _basic_init(key, c_in, c_out, stride):
+    ks = jax.random.split(key, 3)
+    p = {"c1": _cbr_init(ks[0], c_in, c_out),
+         "c2": _cbr_init(ks[1], c_out, c_out)}
+    if stride != 1 or c_in != c_out:
+        p["proj"] = _cbr_init(ks[2], c_in, c_out, ksize=1)
+    return p
+
+
+def _basic_apply(p, x, stats, train, stride):
+    y, n1 = _cbr(p["c1"], x, stats, train, stride=stride)
+    y, n2 = _cbr(p["c2"], y, stats, train, relu=False)
+    new = {"c1": n1, "c2": n2}
+    if "proj" in p:
+        sc, np_ = _cbr(p["proj"], x, stats, train, stride=stride, relu=False)
+        new["proj"] = np_
+    else:
+        sc = x
+    return jax.nn.relu(y + sc), new
+
+
+def _resnet_init(key, spec: CNNSpec, blocks_per_stage, widths):
+    ks = jax.random.split(key, 2 + len(widths) * max(blocks_per_stage))
+    i = 0
+    p = {"stem": _cbr_init(ks[i], spec.in_ch, spec.ch(widths[0]))}
+    i += 1
+    stages = []
+    c_prev = spec.ch(widths[0])
+    for s, w in enumerate(widths):
+        blocks = []
+        for b in range(blocks_per_stage[s]):
+            stride = 2 if (b == 0 and s > 0) else 1
+            blocks.append(_basic_init(ks[i], c_prev, spec.ch(w), stride))
+            c_prev = spec.ch(w)
+            i += 1
+        stages.append(blocks)
+    p["stages"] = stages
+    p["fc"] = L.linear_init(ks[-1], c_prev, spec.num_classes, bias=True)
+    return p
+
+
+def _resnet_apply(p, spec, x, train, blocks_per_stage):
+    stats = []
+    x, new_stem = _cbr(p["stem"], x, stats, train)
+    new_stages = []
+    for s, blocks in enumerate(p["stages"]):
+        new_blocks = []
+        for b, bp in enumerate(blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x, nb = _basic_apply(bp, x, stats, train, stride)
+            new_blocks.append(nb)
+        new_stages.append(new_blocks)
+    x = jnp.mean(x, axis=(1, 2))
+    logits = L.linear(p["fc"], x)
+    return logits, {"stem": new_stem, "stages": new_stages, "fc": p["fc"]}, stats
+
+
+# ------------------------------------------------------------------- API ---
+
+_RESNET_LAYOUT = {
+    "resnet18": ([2, 2, 2, 2], [64, 128, 256, 512]),
+    "wrn16_1": ([2, 2, 2], [16, 32, 64]),
+    "wrn40_1": ([6, 6, 6], [16, 32, 64]),
+}
+_CNN_LAYOUT = {
+    "cnn1": [32, 64, 128],
+    "cnn2": [16, 32, 64, 128],
+    "lenet": [6, 16],
+}
+
+
+def cnn_init(key, spec: CNNSpec) -> dict:
+    if spec.kind in _RESNET_LAYOUT:
+        bps, widths = _RESNET_LAYOUT[spec.kind]
+        return _resnet_init(key, spec, bps, widths)
+    if spec.kind in _CNN_LAYOUT:
+        return _cnn_stack_init(key, spec, _CNN_LAYOUT[spec.kind])
+    raise ValueError(f"unknown CNN kind {spec.kind!r}")
+
+
+def cnn_apply(params: dict, spec: CNNSpec, x: jnp.ndarray, *, train: bool):
+    """x: (B, H, W, C) in [-1, 1]. Returns (logits, new_params, bn_stats)."""
+    if spec.kind in _RESNET_LAYOUT:
+        bps, _ = _RESNET_LAYOUT[spec.kind]
+        return _resnet_apply(params, spec, x, train, bps)
+    return _cnn_stack_apply(params, spec, x, train)
+
+
+def cnn_logits(params: dict, spec: CNNSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Eval-mode logits only."""
+    return cnn_apply(params, spec, x, train=False)[0]

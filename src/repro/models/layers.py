@@ -1,0 +1,173 @@
+"""Core neural-net layers, pure JAX (no flax/haiku).
+
+Convention: every layer is a pair of pure functions
+  ``<name>_init(key, ...) -> params``   (params = pytree of jnp arrays)
+  ``<name>(params, x, ...) -> y``
+Parameters are kept in the dtype given at init (``param_dtype``); compute
+happens in the dtype of the activations flowing in.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of arrays
+
+
+# ---------------------------------------------------------------- linear ---
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: float | None = None, dtype=jnp.float32) -> Params:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms ---
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * p["scale"].astype(x.dtype)
+            + p["bias"].astype(x.dtype))
+
+
+# ------------------------------------------------------------- embedding ---
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * (1.0 / math.sqrt(d))).astype(dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied-weights readout: (..., d) @ (d, vocab)."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int,
+                 theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int32 -> cos,sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, Dh); cos/sin: (B, S, Dh//2) or (S, Dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == x.ndim - 2:          # (S, half) -> broadcast over B, H
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    elif cos.ndim == x.ndim - 1:        # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs ---
+
+def swiglu_init(key, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": linear_init(k1, d, d_ff, dtype=dtype),
+            "up": linear_init(k2, d, d_ff, dtype=dtype),
+            "down": linear_init(k3, d_ff, d, dtype=dtype)}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": linear_init(k1, d, d_ff, bias=True, dtype=dtype),
+            "down": linear_init(k2, d_ff, d, bias=True, dtype=dtype)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# ----------------------------------------------------------- conv (CNNs) ---
+
+def conv_init(key, c_in: int, c_out: int, ksize: int, *,
+              dtype=jnp.float32) -> Params:
+    fan_in = c_in * ksize * ksize
+    w = jax.random.normal(key, (ksize, ksize, c_in, c_out), jnp.float32)
+    return {"w": (w * math.sqrt(2.0 / fan_in)).astype(dtype)}
+
+
+def conv2d(p: Params, x: jnp.ndarray, *, stride: int = 1,
+           padding: str = "SAME") -> jnp.ndarray:
+    """x: (B, H, W, C)."""
+    return jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm_init(c: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype),
+            "mean": jnp.zeros((c,), jnp.float32),
+            "var": jnp.ones((c,), jnp.float32)}
+
+
+def batchnorm(p: Params, x: jnp.ndarray, *, train: bool,
+              momentum: float = 0.9, eps: float = 1e-5):
+    """Returns (y, new_stats). In train mode uses batch stats and returns
+    updated running stats; in eval mode uses running stats."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x.astype(jnp.float32), axes)
+        var = jnp.var(x.astype(jnp.float32), axes)
+        new = {"mean": momentum * p["mean"] + (1 - momentum) * mu,
+               "var": momentum * p["var"] + (1 - momentum) * var}
+    else:
+        mu, var = p["mean"], p["var"]
+        new = {"mean": p["mean"], "var": p["var"]}
+    y = (x.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype) * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    return y, new

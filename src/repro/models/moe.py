@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer (DeepSeek-V2 style: shared + routed top-k).
+
+Dispatch strategy
+-----------------
+Activations are replicated across the `model` mesh axis (Megatron layout),
+experts are sharded over it (expert parallelism).  Each model shard routes
+the full local-token block to *its* experts with a sort-free scatter/gather
+dispatch (capacity-bounded), computes them as one batched matmul, and the
+per-shard partial outputs are summed with a single ``psum`` over the expert
+axis — the same collective cost as a Megatron MLP all-reduce, with zero
+dispatch FLOPs (no GShard one-hot einsums, whose contraction FLOPs would
+dwarf the expert compute at 160 experts x top-6).
+
+The same local routine ``_moe_local`` runs unsharded on CPU (smoke tests)
+and inside ``shard_map`` on the production mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.configs.base import ArchConfig
+
+
+def moe_init(key, cfg: ArchConfig, *, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e)) * scale
+                         ).astype(jnp.float32)},  # router kept fp32
+        "gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, f, d)) * (1.0 / jnp.sqrt(f))
+                 ).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.swiglu_init(ks[4], d, cfg.n_shared_experts * f,
+                                    dtype=dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _moe_local(xf, router_w, w_gate, w_up, w_down, *, cfg: ArchConfig,
+               offset, e_local: int, capacity: int):
+    """Route a flat token block through the local expert slice.
+
+    xf: (T, D).  w_*: (e_local, ...).  offset: global id of first local
+    expert (traced ok).  Returns (y:(T,D) partial sum over local experts,
+    aux load-balance scalar computed from the full router distribution).
+    """
+    T, D = xf.shape
+    k, E = cfg.top_k, cfg.n_experts
+    probs = jax.nn.softmax(
+        (xf.astype(jnp.float32) @ router_w).astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                     # (T, k)
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+
+    # load-balance auxiliary (switch-style): E * sum_e f_e * p_e
+    f_e = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e)
+
+    flat_e = idx.reshape(-1)                                # (T*k,)
+    flat_g = gate.reshape(-1).astype(xf.dtype)
+    token_ids = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    local_e = flat_e - offset
+    mine = (local_e >= 0) & (local_e < e_local)
+    e_cl = jnp.where(mine, local_e, e_local)                # drop bucket
+
+    # position of each assignment inside its expert (cumsum over one-hot)
+    onehot = (e_cl[:, None] == jnp.arange(e_local + 1)[None, :])
+    pos_all = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    pos = jnp.take_along_axis(pos_all, e_cl[:, None], 1)[:, 0]
+    keep = mine & (pos < capacity)
+    e_sc = jnp.where(keep, e_cl, e_local)  # out-of-range rows are dropped
+
+    # slot -> token map; unfilled slots point at the zero-pad row T
+    slot_tok = jnp.full((e_local, capacity), T, jnp.int32)
+    slot_tok = slot_tok.at[e_sc, pos].set(token_ids, mode="drop")
+    slot_gate = jnp.zeros((e_local, capacity), xf.dtype)
+    slot_gate = slot_gate.at[e_sc, pos].set(flat_g, mode="drop")
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], 0)
+    xd = x_pad[slot_tok]                                    # (e, C, D) gather
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xd, w_gate.astype(xf.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", xd, w_up.astype(xf.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xf.dtype))
+    out = out * slot_gate[..., None]
+
+    y = jnp.zeros((T + 1, D), xf.dtype)
+    y = y.at[slot_tok.reshape(-1)].add(out.reshape(-1, D))
+    return y[:T], aux
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+              mesh=None, ep_axis: str = "model",
+              dp_axes: tuple[str, ...] = ()):
+    """x: (B, S, D) -> (y, aux). Sharded iff a mesh with `ep_axis` is given."""
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    E = cfg.n_experts
+
+    if mesh is None or ep_axis not in getattr(mesh, "axis_names", ()):
+        cap = _capacity(xf.shape[0], cfg)
+        y, aux = _moe_local(xf, p["router"]["w"], p["gate"], p["up"],
+                            p["down"], cfg=cfg, offset=0, e_local=E,
+                            capacity=cap)
+    else:
+        n_shards = mesh.shape[ep_axis]
+        e_local = E // n_shards
+        t_local = xf.shape[0] // _dp_size(mesh, dp_axes)
+        cap = _capacity(t_local, cfg)
+
+        def f(xb, rw, wg, wu, wd):
+            off = jax.lax.axis_index(ep_axis) * e_local
+            y, aux = _moe_local(xb, rw, wg, wu, wd, cfg=cfg, offset=off,
+                                e_local=e_local, capacity=cap)
+            y = jax.lax.psum(y, ep_axis)
+            aux = jax.lax.pmean(aux, (*dp_axes, ep_axis))
+            return y, aux
+
+        dspec = P(dp_axes if dp_axes else None, None)
+        y, aux = jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(dspec, P(), P(ep_axis), P(ep_axis), P(ep_axis)),
+            out_specs=(dspec, P()), check_vma=False,
+        )(xf, p["router"]["w"], p["gate"], p["up"], p["down"])
+
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + L.swiglu(p["shared"], x)
+    return y, aux
+
+
+def _dp_size(mesh, dp_axes) -> int:
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n

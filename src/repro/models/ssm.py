@@ -1,0 +1,182 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block, pure JAX.
+
+The chunked SSD algorithm: within chunks the sequence mixing is a masked
+(quadratic) matmul — MXU-friendly; across chunks a linear recurrence over
+per-chunk states.  This jnp implementation doubles as the oracle for the
+Pallas ``ssd_scan`` kernel in ``repro/kernels``.
+
+Sharding note: the canonical fused ``in_proj`` interleaves head-shardable
+sections (z, x, dt) with replicated ones (B, C groups), which no single
+PartitionSpec can express — so projections are kept *split* (in_z, in_x,
+in_bc, in_dt + split convs), letting the launch-layer shard z/x/dt over
+the ``model`` axis (head parallelism) while B/C stay replicated.
+
+Shapes follow the paper: heads H = d_inner / P (P = head dim), state N,
+B/C projections shared across ``n_groups`` groups (G).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.configs.base import ArchConfig
+
+
+def mamba2_init(key, cfg: ArchConfig, *, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": L.linear_init(ks[0], d, di, dtype=dtype),
+        "in_x": L.linear_init(ks[1], d, di, dtype=dtype),
+        "in_bc": L.linear_init(ks[2], d, 2 * g * n, dtype=dtype),
+        "in_dt": L.linear_init(ks[3], d, h, dtype=dtype),
+        "conv_x": {"w": (jax.random.normal(ks[4], (cfg.ssm_conv, di))
+                         * 0.1).astype(dtype),
+                   "b": jnp.zeros((di,), dtype)},
+        "conv_bc": {"w": (jax.random.normal(ks[5], (cfg.ssm_conv, 2 * g * n))
+                          * 0.1).astype(dtype),
+                    "b": jnp.zeros((2 * g * n,), dtype)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.linear_init(ks[2], di, d, dtype=dtype),
+    }
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int, dtype) -> dict:
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {"ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+            "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1,
+                                  2 * cfg.ssm_n_groups * cfg.ssm_state), dtype)}
+
+
+def _causal_conv(x, w, b, pad=None):
+    """Depthwise causal conv. x:(B,S,C), w:(K,C). pad: (B,K-1,C) history or
+    None (zero pad). Returns (y, new_pad)."""
+    K = w.shape[0]
+    S = x.shape[1]
+    if pad is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    return y + b[None, None, :], xp[:, -(K - 1):, :]
+
+
+def segsum(a):
+    """Stable 'segment sum': out[..., i, j] = sum_{j<k<=i} a[..., k], -inf j>i."""
+    T = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int, initial_state=None):
+    """SSD forward (pure jnp; also the model-level reference for the Pallas
+    kernel). x:(B,S,H,P) dt:(B,S,H) a:(H,) b/c:(B,S,G,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    B, S, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc, cl = S // chunk, chunk
+    rep = H // G
+
+    xb = x.reshape(B, nc, cl, H, Pd).astype(jnp.float32)
+    dtb = dt.reshape(B, nc, cl, H).astype(jnp.float32)
+    bb = jnp.repeat(b.reshape(B, nc, cl, G, N), rep, axis=3).astype(jnp.float32)
+    cb = jnp.repeat(c.reshape(B, nc, cl, G, N), rep, axis=3).astype(jnp.float32)
+
+    da = dtb * a[None, None, None, :]                      # log-decays
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (quadratic, MXU-friendly)
+    seg = segsum(jnp.moveaxis(da, -1, -2))                 # (B,nc,H,cl,cl)
+    decay = jnp.exp(seg)
+    cb_ls = jnp.einsum("bclhn,bcshn->bchls", cb, bb)
+    att = cb_ls * decay * jnp.moveaxis(dtb, -1, -2)[..., None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", att, xb)
+
+    # per-chunk states
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchpn",
+                        bb, decay_to_end, dtb, xb)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])              # (B,nc,H)
+    s0 = (jnp.zeros((B, H, Pd, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dec, st = inp
+        return s * dec[..., None, None] + st, s
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    in_decay = jnp.exp(da_cs)
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp", cb, in_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y.astype(x.dtype), final
+
+
+def mamba2_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                 state: dict | None = None, decode: bool = False):
+    """Full Mamba-2 block. x:(B,S,D). Returns (y, new_state)."""
+    B, S, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
+    pd = cfg.ssm_head_dim
+
+    z = L.linear(p["in_z"], x)
+    xi = L.linear(p["in_x"], x)
+    bc = L.linear(p["in_bc"], x)
+    dt_raw = L.linear(p["in_dt"], x)
+
+    pad_x = state["conv_x"] if state is not None else None
+    pad_bc = state["conv_bc"] if state is not None else None
+    xi, new_conv_x = _causal_conv(xi, p["conv_x"]["w"].astype(xi.dtype),
+                                  p["conv_x"]["b"].astype(xi.dtype), pad_x)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc"]["w"].astype(bc.dtype),
+                                   p["conv_bc"]["b"].astype(bc.dtype), pad_bc)
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+
+    xs = xi.reshape(B, S, h, pd)
+    bmat = bc[..., :g * n].reshape(B, S, g, n)
+    cmat = bc[..., g * n:].reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])                               # (H,) < 0
+
+    if decode:
+        assert state is not None and S == 1
+        s = state["ssm"]
+        rep = h // g
+        b1 = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)
+        c1 = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+        dt1 = dt[:, 0]
+        x1 = xs[:, 0].astype(jnp.float32)
+        da = jnp.exp(dt1 * a[None, :])
+        new_ssm = s * da[..., None, None] \
+            + jnp.einsum("bh,bhp,bhn->bhpn", dt1, x1, b1)
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, c1)[:, None].astype(x.dtype)
+    else:
+        y, new_ssm = ssd_chunked(
+            xs, dt, a, bmat, cmat, chunk=min(cfg.ssm_chunk, S),
+            initial_state=None if state is None else state["ssm"])
+
+    y = y + p["d_skip"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = L.rmsnorm(p["norm"], y) * jax.nn.silu(z)           # gated norm
+    out = L.linear(p["out_proj"], y)
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": new_ssm, "conv_x": new_conv_x,
+                     "conv_bc": new_conv_bc}
+    return out, new_state

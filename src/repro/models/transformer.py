@@ -1,0 +1,478 @@
+"""Model assembly for all assigned architecture families.
+
+Families: dense (llama/qwen/phi/gemma/musicgen), moe (deepseek-v2 MLA+MoE),
+ssm (mamba2), hybrid (zamba2), vlm (llama-3.2-vision).
+
+Layer stacks are scanned (``lax.scan`` over stacked params) so the HLO holds
+one compiled block body regardless of depth — essential for compile time on
+the production mesh and for the 1-core CPU dry-run host.
+
+Public API:
+  init_model(key, cfg)            -> params
+  init_cache(cfg, batch, max_len) -> cache pytree (decode/prefill)
+  forward(params, cfg, ...)       -> (logits, new_cache, aux)
+  loss_fn(params, cfg, batch, ...)-> (scalar, aux dict)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+def _scan(f, init, xs, *, use_scan: bool = True):
+    """lax.scan or an unrolled python loop (identical semantics).
+
+    The unrolled form exists for the dry-run: XLA's cost_analysis counts a
+    ``while`` body once, so scanned stacks under-report FLOPs/bytes/
+    collective traffic by ~n_layers x. Roofline extraction compiles small
+    unrolled depth variants instead (launch/dryrun.py)."""
+    if use_scan:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, ys
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------- block inits
+
+def _dense_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(k1, cfg, dtype=dtype),
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype)}
+
+
+def _moe_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    attn = (A.mla_init(k1, cfg, dtype=dtype) if cfg.kv_lora_rank
+            else A.gqa_init(k1, cfg, dtype=dtype))
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype), "attn": attn,
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "moe": M.moe_init(k2, cfg, dtype=dtype)}
+
+
+def _dense_mlp_block_init(key, cfg, dtype):
+    """DeepSeek layer 0: MLA attention + dense MLP sized to active experts."""
+    k1, k2 = jax.random.split(key)
+    d_ff = cfg.d_ff_expert * (cfg.top_k + cfg.n_shared_experts)
+    attn = (A.mla_init(k1, cfg, dtype=dtype) if cfg.kv_lora_rank
+            else A.gqa_init(k1, cfg, dtype=dtype))
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype), "attn": attn,
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(k2, cfg.d_model, d_ff, dtype=dtype)}
+
+
+def _ssm_block_init(key, cfg, dtype):
+    return {"norm": L.rmsnorm_init(cfg.d_model, dtype),
+            "mamba": S.mamba2_init(key, cfg, dtype=dtype)}
+
+
+def _cross_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+            "xattn": A.cross_attn_init(k1, cfg, dtype=dtype),
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+            "mlp_gate": jnp.zeros((), dtype)}
+
+
+def _stack_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------- topology
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer sliding-window size; 0 = global. gemma3: 5 local : 1 global."""
+    if not cfg.sliding_window:
+        return np.zeros((cfg.n_layers,), np.int32)
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.global_every:
+        w[cfg.global_every - 1::cfg.global_every] = 0
+    return w
+
+
+def _hybrid_shape(cfg):
+    n_super = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    return n_super, tail
+
+
+def _vlm_shape(cfg):
+    per = cfg.cross_every
+    n_super = cfg.n_layers // (per + 1)
+    assert n_super * (per + 1) == cfg.n_layers, "vlm layout must tile"
+    return n_super, per
+
+
+# -------------------------------------------------------------- init_model
+
+def init_model(key, cfg: ArchConfig) -> dict:
+    dtype = _pdt(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        params["blocks"] = _stack_init(_dense_block_init, ks[1],
+                                       cfg.n_layers, cfg, dtype)
+    elif fam == "moe":
+        n = cfg.n_layers - (1 if cfg.first_dense else 0)
+        params["blocks"] = _stack_init(_moe_block_init, ks[1], n, cfg, dtype)
+        if cfg.first_dense:
+            params["block0"] = _dense_mlp_block_init(ks[2], cfg, dtype)
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(_ssm_block_init, ks[1],
+                                       cfg.n_layers, cfg, dtype)
+    elif fam == "hybrid":
+        n_super, tail = _hybrid_shape(cfg)
+        flat = _stack_init(_ssm_block_init, ks[1],
+                           n_super * cfg.attn_every, cfg, dtype)
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape(n_super, cfg.attn_every, *a.shape[1:]), flat)
+        if tail:
+            params["tail"] = _stack_init(_ssm_block_init, ks[2], tail, cfg, dtype)
+        params["shared"] = _dense_block_init(ks[3], cfg, dtype)
+    elif fam == "vlm":
+        n_super, per = _vlm_shape(cfg)
+        flat = _stack_init(_dense_block_init, ks[1], n_super * per, cfg, dtype)
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape(n_super, per, *a.shape[1:]), flat)
+        params["cross"] = _stack_init(_cross_block_init, ks[2],
+                                      n_super, cfg, dtype)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+# -------------------------------------------------------------- init_cache
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    dtype = _dt(cfg)
+    fam = cfg.family
+
+    def attn_cache(n=None):
+        mk = (A.mla_cache_init if cfg.kv_lora_rank else A.gqa_cache_init)
+        one = mk(cfg, batch, max_len, dtype)
+        if n is None:
+            return one
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), one)
+
+    if fam in ("dense", "audio"):
+        return {"layers": attn_cache(cfg.n_layers)}
+    if fam == "moe":
+        n = cfg.n_layers - (1 if cfg.first_dense else 0)
+        c = {"layers": attn_cache(n)}
+        if cfg.first_dense:
+            c["layer0"] = attn_cache()
+        return c
+    if fam == "ssm":
+        one = S.mamba2_state_init(cfg, batch, dtype)
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), one)}
+    if fam == "hybrid":
+        n_super, tail = _hybrid_shape(cfg)
+        one = S.mamba2_state_init(cfg, batch, dtype)
+        c = {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (n_super, cfg.attn_every, *a.shape)), one),
+            "shared": attn_cache(n_super)}
+        if tail:
+            c["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (tail, *a.shape)), one)
+        return c
+    if fam == "vlm":
+        n_super, per = _vlm_shape(cfg)
+        one = attn_cache()
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None],
+                                       (n_super, per, *a.shape)), one)}
+    raise ValueError(fam)
+
+
+# ------------------------------------------------------------ block applies
+
+def _apply_dense_block(p, x, cfg, positions, window, cache, cache_pos):
+    h, new_c = A.gqa_apply(p["attn"], L.rmsnorm(p["norm1"], x), cfg,
+                           positions=positions, window=window,
+                           cache=cache, cache_pos=cache_pos)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return x, new_c
+
+
+def _apply_attn(p, x, cfg, positions, window, cache, cache_pos):
+    if cfg.kv_lora_rank:
+        return A.mla_apply(p, x, cfg, positions=positions, window=window,
+                           cache=cache, cache_pos=cache_pos)
+    return A.gqa_apply(p, x, cfg, positions=positions, window=window,
+                       cache=cache, cache_pos=cache_pos)
+
+
+def _apply_moe_block(p, x, cfg, positions, cache, cache_pos, mesh, dp_axes):
+    h, new_c = _apply_attn(p["attn"], L.rmsnorm(p["norm1"], x), cfg,
+                           positions, 0, cache, cache_pos)
+    x = x + h
+    y, aux = M.moe_apply(p["moe"], L.rmsnorm(p["norm2"], x), cfg,
+                         mesh=mesh, dp_axes=dp_axes)
+    return x + y, new_c, aux
+
+
+def _apply_ssm_block(p, x, cfg, state, decode):
+    h, new_s = S.mamba2_apply(p["mamba"], L.rmsnorm(p["norm"], x), cfg,
+                              state=state, decode=decode)
+    return x + h, new_s
+
+
+def _apply_cross_block(p, x, cfg, vision):
+    x = x + A.cross_attn_apply(p["xattn"], L.rmsnorm(p["norm1"], x), vision, cfg)
+    x = x + jnp.tanh(p["mlp_gate"].astype(x.dtype)) \
+        * L.swiglu(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return x
+
+
+# ----------------------------------------------------------------- forward
+
+def forward(params: dict, cfg: ArchConfig, *,
+            tokens: jnp.ndarray | None = None,
+            embeds: jnp.ndarray | None = None,
+            positions: jnp.ndarray | None = None,
+            cache: dict | None = None,
+            cache_pos=None,
+            vision: jnp.ndarray | None = None,
+            mesh=None, dp_axes: tuple[str, ...] = (),
+            decode: bool = False,
+            remat: bool | None = None,
+            return_hidden: bool = False):
+    """Run the trunk. Either ``tokens`` (B,S) int32 or ``embeds`` (B,S,D).
+
+    positions: (S,) absolute positions (defaults to arange(S)).
+    cache: pytree from init_cache (prefill fills it, decode updates it).
+    Returns (logits (B,S,V), new_cache | None, aux dict).
+    """
+    if embeds is None:
+        x = L.embed(params["embed"], tokens, compute_dtype=_dt(cfg))
+    else:
+        x = embeds.astype(_dt(cfg))
+    B, Sq, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(Sq, dtype=jnp.int32)
+    use_remat = cfg.remat if remat is None else remat
+    _scan_l = functools.partial(_scan, use_scan=cfg.scan_layers)
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def maybe_ckpt(f):
+        return jax.checkpoint(f) if use_remat else f
+
+    if fam in ("dense", "audio"):
+        windows = jnp.asarray(layer_windows(cfg))
+
+        def body(carry, xs):
+            h = carry
+            if cache is None:
+                p_l, w = xs
+                h, _ = _apply_dense_block(p_l, h, cfg, positions, w, None, None)
+                return h, 0
+            p_l, w, c_l = xs
+            h, new_c = _apply_dense_block(p_l, h, cfg, positions, w, c_l,
+                                          cache_pos)
+            return h, new_c
+
+        if cache is None:
+            x, _ = _scan_l(maybe_ckpt(body), x,
+                                (params["blocks"], windows))
+            new_cache = None
+        else:
+            x, new_layers = _scan_l(body, x, (params["blocks"], windows,
+                                                   cache["layers"]))
+            new_cache = {"layers": new_layers}
+
+    elif fam == "moe":
+        def body(carry, xs):
+            h, aux = carry
+            if cache is None:
+                p_l = xs
+                h, _, a = _apply_moe_block(p_l, h, cfg, positions, None,
+                                           cache_pos, mesh, dp_axes)
+                return (h, aux + a), 0
+            p_l, c_l = xs
+            h, new_c, a = _apply_moe_block(p_l, h, cfg, positions, c_l,
+                                           cache_pos, mesh, dp_axes)
+            return (h, aux + a), new_c
+
+        new_cache = None
+        c0_new = None
+        if cfg.first_dense:
+            c0 = None if cache is None else cache["layer0"]
+            x, c0_new = _apply_dense_block(
+                params["block0"], x, cfg, positions, 0, c0, cache_pos) \
+                if not cfg.kv_lora_rank else _apply_mla_dense0(
+                    params["block0"], x, cfg, positions, c0, cache_pos)
+        if cache is None:
+            (x, aux_total), _ = _scan_l(maybe_ckpt(body), (x, aux_total),
+                                             params["blocks"])
+        else:
+            (x, aux_total), new_layers = _scan_l(
+                body, (x, aux_total), (params["blocks"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+            if cfg.first_dense:
+                new_cache["layer0"] = c0_new
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            h = carry
+            if cache is None:
+                h, _ = _apply_ssm_block(xs, h, cfg, None, False)
+                return h, 0
+            p_l, s_l = xs
+            h, new_s = _apply_ssm_block(p_l, h, cfg, s_l, decode)
+            return h, new_s
+
+        if cache is None:
+            x, _ = _scan_l(maybe_ckpt(body), x, params["blocks"])
+            new_cache = None
+        else:
+            x, new_states = _scan_l(body, x, (params["blocks"],
+                                                   cache["layers"]))
+            new_cache = {"layers": new_states}
+
+    elif fam == "hybrid":
+        n_super, tail = _hybrid_shape(cfg)
+
+        def inner(carry, xs):
+            h = carry
+            if cache is None:
+                h, _ = _apply_ssm_block(xs, h, cfg, None, False)
+                return h, 0
+            p_l, s_l = xs
+            h, new_s = _apply_ssm_block(p_l, h, cfg, s_l, decode)
+            return h, new_s
+
+        def super_body(carry, xs):
+            h = carry
+            if cache is None:
+                p_grp = xs
+                h, _ = _scan_l(inner, h, p_grp)
+                h, _ = _apply_dense_block(params["shared"], h, cfg,
+                                          positions, 0, None, None)
+                return h, 0
+            p_grp, s_grp, ac = xs
+            h, new_s = _scan_l(inner, h, (p_grp, s_grp))
+            h, new_ac = _apply_dense_block(params["shared"], h, cfg,
+                                           positions, 0, ac, cache_pos)
+            return h, (new_s, new_ac)
+
+        if cache is None:
+            x, _ = _scan_l(maybe_ckpt(super_body), x, params["blocks"])
+            if tail:
+                x, _ = _scan_l(maybe_ckpt(inner), x, params["tail"])
+            new_cache = None
+        else:
+            x, (new_s, new_ac) = _scan_l(
+                super_body, x, (params["blocks"], cache["layers"],
+                                cache["shared"]))
+            new_cache = {"layers": new_s, "shared": new_ac}
+            if tail:
+                x, new_tail = _scan_l(inner, x, (params["tail"],
+                                                      cache["tail"]))
+                new_cache["tail"] = new_tail
+
+    elif fam == "vlm":
+        assert vision is not None, "vlm needs stubbed patch embeddings"
+
+        def inner(carry, xs):
+            h = carry
+            if cache is None:
+                h, _ = _apply_dense_block(xs, h, cfg, positions, 0, None, None)
+                return h, 0
+            p_l, c_l = xs
+            h, new_c = _apply_dense_block(p_l, h, cfg, positions, 0, c_l,
+                                          cache_pos)
+            return h, new_c
+
+        def super_body(carry, xs):
+            h = carry
+            if cache is None:
+                p_grp, p_cross = xs
+                h, _ = _scan_l(inner, h, p_grp)
+                h = _apply_cross_block(p_cross, h, cfg, vision)
+                return h, 0
+            p_grp, p_cross, c_grp = xs
+            h, new_c = _scan_l(inner, h, (p_grp, c_grp))
+            h = _apply_cross_block(p_cross, h, cfg, vision)
+            return h, new_c
+
+        if cache is None:
+            x, _ = _scan_l(maybe_ckpt(super_body), x,
+                                (params["blocks"], params["cross"]))
+            new_cache = None
+        else:
+            x, new_layers = _scan_l(super_body, x,
+                                         (params["blocks"], params["cross"],
+                                          cache["layers"]))
+            new_cache = {"layers": new_layers}
+    else:
+        raise ValueError(fam)
+
+    x = L.rmsnorm(params["final_norm"], x)
+    if return_hidden:   # callers fuse their own (chunked) readout (§Perf-4)
+        return x, new_cache, {"moe_aux": aux_total}
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache, {"moe_aux": aux_total}
+
+
+def _apply_mla_dense0(p, x, cfg, positions, cache, cache_pos):
+    h, new_c = A.mla_apply(p["attn"], L.rmsnorm(p["norm1"], x), cfg,
+                           positions=positions, cache=cache,
+                           cache_pos=cache_pos)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return x, new_c
+
+
+# ------------------------------------------------------------------- loss
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *,
+            mesh=None, dp_axes: tuple[str, ...] = ()):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, _, aux = forward(params, cfg, tokens=batch["tokens"],
+                             vision=batch.get("vision"),
+                             mesh=mesh, dp_axes=dp_axes)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * aux["moe_aux"]
+    return total, {"ce": loss, "moe_aux": aux["moe_aux"]}

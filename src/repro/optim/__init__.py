@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (adam, sgd, clip_by_global_norm,
+                                    global_norm)
+from repro.optim.schedules import constant, cosine, warmup_cosine
+from repro.optim.ldam import ldam_loss, class_margins
+
+__all__ = ["adam", "sgd", "clip_by_global_norm", "global_norm",
+           "constant", "cosine", "warmup_cosine", "ldam_loss",
+           "class_margins"]

@@ -1,0 +1,22 @@
+"""LDAM loss (Cao et al. 2019) — the paper combines it with DENSE
+(Table 4, DENSE+LDAM) to handle locally imbalanced client data."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def class_margins(class_counts: jnp.ndarray, max_margin: float = 0.5):
+    """m_c proportional to n_c^{-1/4}, normalized so max(m) = max_margin."""
+    counts = jnp.maximum(class_counts.astype(jnp.float32), 1.0)
+    m = 1.0 / jnp.sqrt(jnp.sqrt(counts))
+    return m * (max_margin / jnp.max(m))
+
+
+def ldam_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+              margins: jnp.ndarray, s: float = 30.0) -> jnp.ndarray:
+    """Margin-adjusted CE: subtract m_y from the true-class logit, scale by s."""
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    adj = logits - onehot * margins[None, :].astype(logits.dtype)
+    logp = jax.nn.log_softmax(s * adj, axis=-1)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))

@@ -1,0 +1,80 @@
+"""Minimal pure-JAX optimizers (optax is not available offline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), n
+
+
+class sgd:
+    """SGD with (heavy-ball) momentum, matching torch.optim.SGD semantics
+    (the paper's client optimizer: lr=0.01, momentum=0.9)."""
+
+    def __init__(self, lr, momentum: float = 0.0, weight_decay: float = 0.0):
+        self.lr, self.momentum, self.wd = lr, momentum, weight_decay
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(self, grads, state, params, step=0):
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.wd:
+            grads = jax.tree.map(
+                lambda g, p: g + self.wd * p.astype(g.dtype), grads, params)
+        if self.momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, ()
+        new_state = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_state)
+        return new_p, new_state
+
+
+class adam:
+    """Adam (the paper's generator optimizer: lr=1e-3)."""
+
+    def __init__(self, lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+        self.lr, self.b1, self.b2, self.eps, self.wd = lr, b1, b2, eps, weight_decay
+
+    def init(self, params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, step=None):
+        t = state["t"] + 1
+        lr = self.lr(t) if callable(self.lr) else self.lr
+        if self.wd:
+            grads = jax.tree.map(
+                lambda g, p: g + self.wd * p.astype(g.dtype), grads, params)
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        new_p = jax.tree.map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + self.eps)).astype(p.dtype),
+            params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}

@@ -1,0 +1,13 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: never set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real (single) device; only launch/dryrun.py
+# requests 512 placeholder devices (as its first import lines). Importing
+# that module from a test is harmless because we lock the backend to the
+# default device count right away:
+import jax  # noqa: E402
+
+jax.devices()

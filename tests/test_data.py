@@ -1,0 +1,74 @@
+"""Data pipeline + checkpoint tests."""
+import jax
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (batches, lm_batches, make_classification_data,
+                        make_lm_data)
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_classification_data_shapes_and_range():
+    d = make_classification_data(0, num_classes=4, size=16, ch=3,
+                                 train_per_class=20, test_per_class=5)
+    x, y = d["train"]
+    assert x.shape == (80, 16, 16, 3) and y.shape == (80,)
+    assert x.min() >= -1.0 and x.max() <= 1.0
+    assert set(y.tolist()) == set(range(4))
+    xt, yt = d["test"]
+    assert xt.shape == (20, 16, 16, 3)
+
+
+def test_classification_data_is_learnable_structure():
+    """Same-class samples must be closer than cross-class (signal exists)."""
+    d = make_classification_data(1, num_classes=4, size=16, ch=1,
+                                 train_per_class=30, test_per_class=5)
+    x, y = d["train"]
+    mus = np.stack([x[y == c].mean(0).ravel() for c in range(4)])
+    within = np.mean([np.linalg.norm(x[y == c] - mus[c].reshape(1, 16, 16, 1))
+                      for c in range(4)])
+    cross = np.mean([np.linalg.norm(mus[a] - mus[b])
+                     for a in range(4) for b in range(4) if a != b])
+    assert cross > 0.5  # class templates are distinct
+
+
+def test_deterministic_given_seed():
+    a = make_classification_data(7, num_classes=2, size=8, ch=1,
+                                 train_per_class=4, test_per_class=2)
+    b = make_classification_data(7, num_classes=2, size=8, ch=1,
+                                 train_per_class=4, test_per_class=2)
+    np.testing.assert_array_equal(a["train"][0], b["train"][0])
+
+
+@given(st.integers(1, 5), st.integers(8, 32))
+def test_batches_cover_dataset_every_epoch(epochs, bs):
+    x = np.arange(100, dtype=np.float32)[:, None]
+    y = np.arange(100, dtype=np.int32)
+    seen = []
+    for bx, by in batches(x, y, bs, seed=0, epochs=epochs):
+        assert len(bx) == len(by) <= bs
+        seen.extend(by.tolist())
+    assert len(seen) == 100 * epochs
+    assert np.bincount(np.array(seen) % 100).min() == epochs
+
+
+def test_lm_data_and_batches():
+    toks = make_lm_data(0, vocab=64, n_tokens=5000)
+    assert toks.min() >= 0 and toks.max() < 64
+    for x, y in lm_batches(toks, batch=4, seq=16, seed=0, steps=3):
+        assert x.shape == (4, 16) and y.shape == (4, 16)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])  # shifted
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": [jnp.ones((4,)), jnp.zeros((2, 2))]}
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, tree, meta={"step": 3})
+    back = restore_checkpoint(p, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,71 @@
+"""Unit tests for dry-run instrumentation: the HLO collective parser and
+analytic FLOPs model (no device work — pure text/number manipulation)."""
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.dryrun import collective_bytes, model_flops, depth_pair
+from repro.launch import specs as SP
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,512,2560]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[4096]{0} all-reduce(%y), to_apply=%add
+  %ars = f32[8,16]{1,0} all-reduce-start(%z), to_apply=%add
+  %rs = bf16[2,64]{1,0} reduce-scatter(%w), dimensions={0}
+  %a2a = s32[128]{0} all-to-all(%v), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%u), source_target_pairs=...
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parser_counts_each_kind():
+    c = collective_bytes(HLO_SAMPLE)
+    assert c["all-gather"] == 16 * 512 * 2560 * 2
+    assert c["all-reduce"] == 4096 * 4 + 8 * 16 * 4   # incl. -start form
+    assert c["reduce-scatter"] == 2 * 64 * 2
+    assert c["all-to-all"] == 128 * 4
+    assert c["collective-permute"] == 4 * 4 * 2
+    assert c["count"] == 6
+    assert c["total"] == sum(c[k] for k in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+
+
+def test_collective_parser_empty():
+    assert collective_bytes("ENTRY %m { %d = f32[2]{0} add(%a, %b) }")[
+        "total"] == 0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("llama3.2-3b")
+    n = cfg.param_count()
+    t = model_flops(cfg, "train_4k")
+    np.testing.assert_allclose(t, 6 * n * 256 * 4096, rtol=1e-6)
+    d = model_flops(cfg, "decode_32k")
+    np.testing.assert_allclose(d, 2 * n * 128, rtol=1e-6)   # one token/seq
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    assert model_flops(cfg, "train_4k") \
+        == 6.0 * cfg.active_param_count() * 256 * 4096
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+
+
+def test_depth_pair_by_family():
+    assert depth_pair(get_config("llama3.2-3b")) == (2, 4)
+    assert depth_pair(get_config("zamba2-7b")) == (6, 12)      # superblock
+    assert depth_pair(get_config("llama-3.2-vision-11b")) == (5, 10)
+
+
+def test_input_specs_shapes():
+    cfg = get_config("phi3-medium-14b")
+    s = SP.input_specs(cfg, "train_4k")
+    assert s["batch_inputs"]["tokens"].shape == (256, 4096)
+    d = SP.input_specs(cfg, "decode_32k")
+    assert d["tokens"].shape == (128, 1)
+    kv = d["cache"]["layers"]["k"]
+    assert kv.shape == (40, 128, 32768, 10, 128)
+    v = SP.input_specs(get_config("llama-3.2-vision-11b"), "prefill_32k")
+    assert v["vision"].shape == (32, 1601, 4096)

@@ -1,0 +1,110 @@
+"""FL-runtime invariants: Dirichlet partition, FedAvg, one-shot protocol,
+communication accounting, heterogeneity support."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ensemble import Client, ensemble_logits, split_clients
+from repro.data.partition import dirichlet_partition
+from repro.fl.fedavg import fedavg
+from repro.fl.protocol import CommLedger, param_bytes
+from repro.models.cnn import CNNSpec, cnn_init, cnn_logits
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(2, 8), st.sampled_from([0.1, 0.5, 5.0]),
+       st.integers(0, 1000))
+def test_dirichlet_partition_is_a_partition(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, 300)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert set(allidx.tolist()) == set(range(len(labels)))  # exact cover
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_dirichlet_skew_increases_as_alpha_decreases():
+    labels = np.repeat(np.arange(10), 100)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 5, alpha, seed=0)
+        # mean per-client entropy of the class distribution
+        ent = []
+        for p in parts:
+            c = np.bincount(labels[p], minlength=10) / len(p)
+            c = c[c > 0]
+            ent.append(-(c * np.log(c)).sum())
+        return np.mean(ent)
+
+    assert skew(0.1) < skew(10.0)
+
+
+def _tiny_clients(n=3, kind="cnn1", width=0.25, img=8):
+    spec = CNNSpec(kind=kind, num_classes=4, in_ch=1, width=width,
+                   image_size=img)
+    out = []
+    for i in range(n):
+        p = cnn_init(jax.random.PRNGKey(i), spec)
+        out.append(Client(spec=spec, params=p, n_data=10 * (i + 1)))
+    return out
+
+
+def test_fedavg_weighted_mean():
+    clients = _tiny_clients(2)
+    avg = fedavg(clients)
+    w = [10 / 30, 20 / 30]
+    leaf = lambda p: jax.tree.leaves(p)[0]
+    want = w[0] * leaf(clients[0].params) + w[1] * leaf(clients[1].params)
+    np.testing.assert_allclose(np.asarray(leaf(avg)), np.asarray(want),
+                               rtol=1e-5)
+
+
+def test_fedavg_rejects_heterogeneous():
+    c1 = _tiny_clients(1, kind="cnn1")[0]
+    c2 = _tiny_clients(1, kind="cnn2")[0]
+    with pytest.raises(ValueError):
+        fedavg([c1, c2])
+
+
+def test_ensemble_supports_heterogeneous_models():
+    """The paper's core enabler: logit averaging works across architectures
+    where parameter averaging cannot."""
+    c1 = _tiny_clients(1, kind="cnn1")[0]
+    c2 = _tiny_clients(1, kind="cnn2")[0]
+    c3 = _tiny_clients(1, kind="wrn16_1")[0]
+    clients = [c1, c2, c3]
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 8, 8, 1))
+    specs, cparams = split_clients(clients)
+    avg = ensemble_logits(specs, cparams, x)
+    assert avg.shape == (5, 4)
+    per = [cnn_logits(c.params, c.spec, x) for c in clients]
+    want = sum(jnp.asarray(p, jnp.float32) for p in per) / 3
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(want), atol=1e-5)
+
+
+def test_comm_ledger_one_shot_property():
+    led = CommLedger()
+    for i in range(5):
+        led.record("up", f"client{i}", 1000, "round0-model-upload")
+    assert led.rounds == 1
+    assert led.uplink_bytes == 5000
+    assert led.downlink_bytes == 0  # one-shot: nothing comes back
+
+
+def test_param_bytes_counts_all_leaves():
+    p = {"a": jnp.zeros((10,), jnp.float32), "b": jnp.zeros((4,), jnp.int32)}
+    assert param_bytes(p) == 40 + 16
+
+
+def test_oneshot_uplink_less_than_multiround():
+    """DENSE's raison d'être: 1 round of uploads vs 2*rounds transfers."""
+    p = {"w": jnp.zeros((1000,), jnp.float32)}
+    m, rounds = 5, 10
+    oneshot = m * param_bytes(p)
+    fedavg_total = rounds * m * param_bytes(p) * 2
+    assert oneshot * (2 * rounds) == fedavg_total

@@ -1,0 +1,89 @@
+"""Property tests for the DENSE loss functions (paper Eqs. 2-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as LS
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def logits_pair(draw, rows=4, classes=8, scale=5.0):
+    a = draw(st.integers(0, 2 ** 31 - 1))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(a))
+    return (jax.random.normal(k1, (rows, classes)) * scale,
+            jax.random.normal(k2, (rows, classes)) * scale)
+
+
+@st.composite
+def _pairs(draw):
+    return logits_pair(draw)
+
+
+@given(_pairs())
+def test_kl_nonnegative(pair):
+    p, q = pair
+    kl = LS.softmax_kl(p, q)
+    assert np.all(np.asarray(kl) >= -1e-5)
+
+
+@given(_pairs())
+def test_kl_self_zero(pair):
+    p, _ = pair
+    kl = LS.softmax_kl(p, p)
+    np.testing.assert_allclose(np.asarray(kl), 0.0, atol=1e-5)
+
+
+@given(_pairs())
+def test_distill_loss_is_mean_kl(pair):
+    p, q = pair
+    np.testing.assert_allclose(float(LS.distill_loss(p, q)),
+                               float(jnp.mean(LS.softmax_kl(p, q))),
+                               rtol=1e-6)
+
+
+@given(_pairs())
+def test_div_loss_nonpositive_and_zero_on_agreement(pair):
+    p, q = pair
+    # Eq. 4 is -omega*KL <= 0
+    assert float(LS.div_loss(p, q)) <= 1e-6
+    # when argmaxes agree everywhere, omega = 0 -> loss exactly 0
+    assert float(LS.div_loss(p, p + 0.0)) == pytest.approx(0.0, abs=1e-7)
+
+
+@given(_pairs())
+def test_ce_loss_matches_manual(pair):
+    p, _ = pair
+    y = jnp.arange(p.shape[0]) % p.shape[1]
+    manual = -jnp.mean(jax.nn.log_softmax(p, -1)[jnp.arange(p.shape[0]), y])
+    np.testing.assert_allclose(float(LS.ce_loss(p, y)), float(manual),
+                               rtol=1e-6)
+
+
+def test_bn_loss_zero_when_stats_match():
+    stats = [[{"mean": jnp.ones(4), "var": jnp.full(4, 2.0),
+               "running_mean": jnp.ones(4), "running_var": jnp.full(4, 2.0)}]]
+    assert float(LS.bn_loss(stats)) == 0.0
+
+
+def test_bn_loss_positive_on_mismatch_and_averages_over_clients():
+    one = [{"mean": jnp.zeros(4), "var": jnp.ones(4),
+            "running_mean": jnp.ones(4), "running_var": jnp.ones(4)}]
+    l1 = float(LS.bn_loss([one]))
+    l2 = float(LS.bn_loss([one, one]))
+    assert l1 > 0
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)  # (1/m) sum_k
+
+
+def test_gen_loss_combines_terms():
+    p = jnp.array([[2.0, -1.0, 0.0]])
+    q = jnp.array([[-1.0, 2.0, 0.0]])
+    y = jnp.array([0])
+    stats = [[{"mean": jnp.zeros(2), "var": jnp.ones(2),
+               "running_mean": jnp.ones(2), "running_var": jnp.ones(2)}]]
+    total, parts = LS.gen_loss(p, y, stats, q, lambda_bn=2.0, lambda_div=0.5)
+    expect = parts["ce"] + 2.0 * parts["bn"] + 0.5 * parts["div"]
+    np.testing.assert_allclose(float(total), float(expect), rtol=1e-6)

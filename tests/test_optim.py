@@ -1,0 +1,72 @@
+"""Optimizer / schedule / LDAM unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_sgd_momentum_matches_torch_semantics():
+    """buf = mu*buf + g; p -= lr*buf (two manual steps)."""
+    opt = optim.sgd(0.1, momentum=0.9)
+    p = {"w": jnp.array([1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0])}
+    p, s = opt.update(g, s, p)       # buf=1,   p=1-0.1
+    p, s = opt.update(g, s, p)       # buf=1.9, p=0.9-0.19
+    np.testing.assert_allclose(float(p["w"][0]), 1 - 0.1 - 0.19, rtol=1e-6)
+
+
+def test_adam_first_step_size():
+    """With bias correction, |step_1| ~= lr regardless of grad scale."""
+    for scale in (1e-3, 1.0, 1e3):
+        opt = optim.adam(0.01)
+        p = {"w": jnp.array([0.0])}
+        s = opt.init(p)
+        p2, _ = opt.update({"w": jnp.array([scale])}, s, p)
+        np.testing.assert_allclose(abs(float(p2["w"][0])), 0.01, rtol=1e-3)
+
+
+@given(st.floats(0.1, 10.0))
+def test_clip_by_global_norm(max_norm):
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((2,), -4.0)}
+    clipped, norm = optim.clip_by_global_norm(g, max_norm)
+    new_norm = float(optim.global_norm(clipped))
+    assert new_norm <= max_norm * 1.001
+    if float(norm) <= max_norm:      # small grads untouched
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(g["a"]), rtol=1e-6)
+
+
+def test_schedules():
+    c = optim.constant(0.1)
+    assert c(0) == c(1000) == 0.1
+    cos = optim.cosine(1.0, 100)
+    assert float(cos(0)) == 1.0
+    assert float(cos(100)) < 1e-6
+    np.testing.assert_allclose(float(cos(50)), 0.5, rtol=1e-5)
+    wc = optim.warmup_cosine(1.0, 10, 110)
+    assert float(wc(0)) == 0.0
+    np.testing.assert_allclose(float(wc(10)), 1.0, atol=1e-6)
+
+
+def test_ldam_margins_order():
+    """Rarer classes get larger margins (the LDAM idea)."""
+    counts = jnp.array([1000.0, 100.0, 10.0])
+    m = optim.class_margins(counts)
+    assert float(m[2]) > float(m[1]) > float(m[0])
+    assert float(jnp.max(m)) == np.float32(0.5)
+
+
+def test_ldam_loss_exceeds_ce_for_rare_true_class():
+    logits = jnp.array([[2.0, 0.0, 0.0]])
+    y = jnp.array([2])                        # rare class
+    margins = optim.class_margins(jnp.array([1000.0, 100.0, 1.0]))
+    ldam = float(optim.ldam_loss(logits, y, margins, s=1.0))
+    logp = jax.nn.log_softmax(logits, -1)
+    ce = float(-logp[0, 2])
+    assert ldam > ce                         # margin makes it harder

@@ -1,0 +1,105 @@
+"""Equivalence tests for the §Perf optimizations (EXPERIMENTS.md):
+blockwise attention, chunked distillation KL, decode-cache sharding rules.
+Optimizations must never change the math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as T
+
+
+@pytest.fixture(autouse=True)
+def small_blocks(monkeypatch):
+    monkeypatch.setattr(A, "BLOCKWISE_MIN", 32)
+    yield
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma3-4b",
+                                  "deepseek-v2-lite-16b"])
+def test_blockwise_attention_matches_materialized(arch):
+    cfg = get_smoke_config(arch).replace(capacity_factor=64.0,
+                                         attn_block_q=16, attn_block_kv=16)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                cfg.vocab_size)
+    a, _, _ = T.forward(params, cfg, tokens=tokens)
+    b, _, _ = T.forward(params, cfg.replace(use_blockwise_attn=False),
+                        tokens=tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_blockwise_direct_vs_sdpa_with_window():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 64, 2, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16))
+    pos = jnp.arange(64)
+    for win in (0, 24):
+        out = A._sdpa_blockwise(q, k, v, pos, pos, win, 0.25, bq=16, bk=16)
+        mask = (pos[None, :] <= pos[:, None]) \
+            & ((pos[:, None] - pos[None, :] < win) | (win == 0))
+        want = A._sdpa(q, k, v, mask, 0.25)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-5)
+
+
+def test_chunked_kl_matches_materialized():
+    from repro.core import dense_llm as DL
+    from repro.launch.mesh import make_host_mesh
+    from repro import optim
+    cfg = get_smoke_config("llama3.2-3b")
+    mesh = make_host_mesh(1)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[T.init_model(jax.random.PRNGKey(i), cfg) for i in range(2)])
+    stu = T.init_model(jax.random.PRNGKey(9), cfg)
+    opt = optim.adam(1e-4)
+    state = {"params": stu, "opt": opt.init(stu),
+             "step": jnp.zeros((), jnp.int32)}
+    emb = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    with mesh:
+        s1 = DL.make_pod_distill_step(cfg, mesh, n_clients=2,
+                                      chunked_kl=False)
+        s2 = DL.make_pod_distill_step(cfg, mesh, n_clients=2,
+                                      chunked_kl=True, kl_chunk=16)
+        st1, m1 = jax.jit(s1)(state, stacked, emb)
+        st2, m2 = jax.jit(s2)(state, stacked, emb)
+    np.testing.assert_allclose(float(m1["dis_loss"]), float(m2["dis_loss"]),
+                               rtol=1e-5)
+    # resulting parameter updates identical too
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        st1["params"], st2["params"])
+    assert max(jax.tree.leaves(d)) < 1e-4
+
+
+def test_cache_seq_sharding_rule():
+    """§Perf-3: replicated-attention archs shard the cache S dim over
+    model; sharded-attention archs keep head sharding."""
+    from types import SimpleNamespace
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import get_config
+    from repro.launch import shardings as SH
+    from repro.launch import specs as SP
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 16, "model": 16})
+
+    def kv_spec(arch, shape):
+        cfg = get_config(arch)
+        spec = SP.input_specs(cfg, shape)
+        cs = SH.cache_specs(cfg, spec["cache"], mesh,
+                            batch=SP.SHAPES[shape]["batch"])
+        leaves = jax.tree_util.tree_leaves(
+            cs, is_leaf=lambda x: isinstance(x, P))
+        return leaves[0]
+
+    qwen = kv_spec("qwen1.5-4b", "decode_32k")        # replicated attn
+    assert "model" in jax.tree_util.tree_leaves(tuple(qwen)) or \
+        any(a == "model" or (isinstance(a, tuple) and "model" in a)
+            for a in qwen)
+    music = kv_spec("musicgen-large", "decode_32k")   # head-sharded attn
+    # heads dim (index -2 of the unstacked (B,S,kh,hd)) carries model
+    assert music[-2] == "model"

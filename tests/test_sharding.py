@@ -1,0 +1,92 @@
+"""Sharding-rule validity for every FULL config x both production meshes —
+the structural core of the dry-run: every PartitionSpec axis must evenly
+divide the corresponding dim. Uses abstract shapes only (no devices)."""
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import available_archs, get_config
+from repro.launch import shardings as SH
+from repro.launch import specs as SP
+
+MESH1 = SimpleNamespace(axis_names=("data", "model"),
+                        shape={"data": 16, "model": 16})
+MESH2 = SimpleNamespace(axis_names=("pod", "data", "model"),
+                        shape={"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisibility(tree, specs, mesh, where=""):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    sleaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(sleaves)
+    for (path, leaf), spec in zip(leaves, sleaves):
+        assert len(spec) <= len(leaf.shape), (where, path, spec, leaf.shape)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, \
+                (where, jax.tree_util.keystr(path), dim, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", available_archs())
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["16x16", "2x16x16"])
+def test_param_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    aparams = SP.abstract_params(cfg)
+    specs = SH.param_specs(cfg, aparams, mesh)
+    _check_divisibility(aparams, specs, mesh, where=arch)
+
+
+@pytest.mark.parametrize("arch", available_archs())
+def test_zero1_specs_divide_and_shard_big_leaves(arch):
+    cfg = get_config(arch)
+    aparams = SP.abstract_params(cfg)
+    specs = SH.param_specs(cfg, aparams, MESH1)
+    z = SH.zero1_specs(specs, aparams, MESH1)
+    _check_divisibility(aparams, z, MESH1, where=arch)
+    # at least one big replicated leaf gained a 'data' axis
+    got_data = any("data" in [a for a in spec if a]
+                   for spec in jax.tree_util.tree_leaves(
+                       z, is_leaf=lambda x: isinstance(x, P)))
+    assert got_data, arch
+
+
+@pytest.mark.parametrize("arch", available_archs())
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape):
+    cfg = get_config(arch)
+    if shape == "long_500k" and not SP.long_context_ok(cfg):
+        pytest.skip("full-attention arch skips long_500k (DESIGN.md §5)")
+    spec = SP.input_specs(cfg, shape)
+    cspecs = SH.cache_specs(cfg, spec["cache"], MESH1,
+                            batch=SP.SHAPES[shape]["batch"])
+    _check_divisibility(spec["cache"], cspecs, MESH1, where=f"{arch}/{shape}")
+
+
+def test_batch_specs():
+    assert SH.batch_specs(MESH1, 256) == ("data",)
+    assert SH.batch_specs(MESH2, 256) == ("pod", "data")
+    assert SH.batch_specs(MESH1, 1) is None
+    assert SH.batch_specs(MESH2, 2) is None  # 2 % 32 != 0
+
+
+def test_long_context_policy():
+    ok = [a for a in available_archs()
+          if SP.long_context_ok(get_config(a))]
+    assert sorted(ok) == ["gemma3-4b", "mamba2-130m", "zamba2-7b"]
+
+
+def test_attn_sharding_flags():
+    assert SH.attn_sharded(get_config("musicgen-large"), MESH1)
+    assert SH.attn_sharded(get_config("deepseek-v2-236b"), MESH1)
+    assert SH.attn_sharded(get_config("zamba2-7b"), MESH1)
+    assert not SH.attn_sharded(get_config("gemma3-4b"), MESH1)   # 8q/4kv
+    assert not SH.attn_sharded(get_config("phi3-medium-14b"), MESH1)  # 40/10
+    assert SH.ssm_sharded(get_config("zamba2-7b"), MESH1)        # 112 heads
+    assert not SH.ssm_sharded(get_config("mamba2-130m"), MESH1)  # 24 heads
