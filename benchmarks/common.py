@@ -15,6 +15,43 @@ from repro.fl import (CommLedger, build_federation, fed_adi, fed_dafl,
                       fed_df, fedavg)
 
 
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds of fn(*args) after warmup calls.
+
+    The warmup absorbs jit compilation (a cold call is mostly compile
+    time, which the k/e tables must not report as runtime);
+    block_until_ready forces async dispatch to finish before the clock
+    stops. Returns the median of `iters` timed calls."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def time_ab(fa, a_args, fb, b_args, *, warmup: int = 3,
+            iters: int = 21) -> tuple[float, float]:
+    """Interleaved A/B timing: one A call then one B call per rep, median
+    per side. On a noisy shared host, timing A's reps back-to-back and
+    then B's lets a slow system phase land entirely on one side and skew
+    the ratio; alternating exposes both sides to the same noise."""
+    for _ in range(warmup):
+        jax.block_until_ready(fa(*a_args))
+        jax.block_until_ready(fb(*b_args))
+    tsa, tsb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa(*a_args))
+        tsa.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb(*b_args))
+        tsb.append(time.perf_counter() - t0)
+    return float(np.median(tsa)), float(np.median(tsb))
+
+
 def base_cfg(full: bool) -> DenseExperimentConfig:
     """CPU-scaled analogue of the paper's §3.1.4 setting (DESIGN.md §2:
     relative claims, not absolute CIFAR numbers)."""
@@ -85,17 +122,18 @@ def run_method(method: str, scfg, seed=0, **dense_kw):
 
 
 def ensemble_acc(scfg, seed=0):
-    """Distillation ceiling: accuracy of the averaged-logit ensemble."""
+    """Distillation ceiling: accuracy of the averaged-logit ensemble
+    (grouped-vmap fast path)."""
     import jax.numpy as jnp
-    from repro.core import ensemble_logits, split_clients
+    from repro.core import grouped_ensemble_logits, stack_grouped
     data, clients, _ = get_federation(scfg, seed)
     xt, yt = data["test"]
-    specs, cparams = split_clients(clients)
-    f = jax.jit(lambda cp, x: ensemble_logits(specs, cp, x))
+    gspecs, gparams = stack_grouped(clients)
+    f = jax.jit(lambda gp, x: grouped_ensemble_logits(gspecs, gp, x))
     pred = []
     for i in range(0, len(yt), 256):
         pred.append(np.argmax(np.asarray(
-            f(cparams, jnp.asarray(xt[i:i + 256]))), -1))
+            f(gparams, jnp.asarray(xt[i:i + 256]))), -1))
     return float((np.concatenate(pred) == yt).mean())
 
 

@@ -11,6 +11,7 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   T6  generator-loss ablation (CE / BN / div)                [Table 6]
   F3  one-shot FedAvg vs DENSE vs local models               [Figure 3]
   K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
+  E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
   R   roofline summary from dry-run artifacts                [§Roofline]
 """
 from __future__ import annotations
@@ -24,13 +25,14 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (base_cfg, emit, ensemble_acc, get_federation,
-                               run_method)
+                               run_method, time_ab, time_call)
 
 
 def t1_alpha_sweep(full: bool):
@@ -127,40 +129,132 @@ def f3_local_vs_global(full: bool):
 
 
 def k_kernels(full: bool):
+    """Kernel microbenches. time_call = warmup + median-of-N, so the
+    reported µs is steady-state runtime, not compile time."""
     from repro.kernels import ops, ref
     key = jax.random.PRNGKey(0)
     B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
     q = jax.random.normal(key, (B, Hq, S, D))
     k = jax.random.normal(key, (B, Hkv, S, D))
     v = jax.random.normal(key, (B, Hkv, S, D))
-    t0 = time.time()
+    dt = time_call(lambda: ops.flash_attention(q, k, v, block_q=64,
+                                               block_k=64))
     o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
-    jax.block_until_ready(o)
     err = float(jnp.max(jnp.abs(o - ref.attention(q, k, v))))
-    emit("k/flash_attention/256x64", time.time() - t0,
-         f"max_err={err:.2e};interpret=cpu")
+    emit("k/flash_attention/256x64", dt, f"max_err={err:.2e};interpret=cpu")
 
     t_ = jax.random.normal(key, (64, 4096)) * 3
     s_ = jax.random.normal(jax.random.PRNGKey(1), (64, 4096)) * 3
-    t0 = time.time()
+    dt = time_call(lambda: ops.distill_kl(t_, s_, 32, 1024))
     r = ops.distill_kl(t_, s_, 32, 1024)
-    jax.block_until_ready(r)
     err = float(jnp.max(jnp.abs(r - ref.distill_kl(t_, s_))))
-    emit("k/distill_kl/64x4096", time.time() - t0,
-         f"max_err={err:.2e};interpret=cpu")
+    emit("k/distill_kl/64x4096", dt, f"max_err={err:.2e};interpret=cpu")
 
     x = jax.random.normal(key, (1, 256, 4, 32))
-    dt = jax.nn.softplus(jax.random.normal(key, (1, 256, 4)))
+    dt_in = jax.nn.softplus(jax.random.normal(key, (1, 256, 4)))
     a = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
     b = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
     c = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
-    t0 = time.time()
-    y, st = ops.ssd_scan(x, dt, a, b, c, chunk=64)
-    jax.block_until_ready(y)
-    y2, _ = ref.ssd(x, dt, a, b, c)
+    dt = time_call(lambda: ops.ssd_scan(x, dt_in, a, b, c, chunk=64))
+    y, _ = ops.ssd_scan(x, dt_in, a, b, c, chunk=64)
+    y2, _ = ref.ssd(x, dt_in, a, b, c)
     err = float(jnp.max(jnp.abs(y - y2)))
-    emit("k/ssd_scan/256x4x32", time.time() - t0,
-         f"max_err={err:.2e};interpret=cpu")
+    emit("k/ssd_scan/256x4x32", dt, f"max_err={err:.2e};interpret=cpu")
+
+
+def e_ensemble(full: bool):
+    """E: the DENSE server hot paths. (a) ensemble-forward µs/call,
+    unrolled loop vs grouped-vmap, m ∈ {5,10,20} homogeneous clients;
+    (b) epochs/sec of train_dense_server for loop_mode python vs fused.
+    Post-warmup medians (time_call); trained clients are unnecessary —
+    random inits have identical cost."""
+    from repro.core.ensemble import (Client, ensemble_logits,
+                                     grouped_ensemble_logits, split_clients,
+                                     stack_grouped)
+    from repro.models.cnn import CNNSpec, cnn_init
+    spec = CNNSpec(kind="cnn1", num_classes=10, in_ch=3, width=0.5,
+                   image_size=16)
+    # per-call latency at a serving-style microbatch — the regime where
+    # the unrolled loop pays m× fixed conv cost and the fused grouped
+    # path (one batched GEMM per layer) structurally wins; large batches
+    # are conv-FLOP-bound and converge to the same floor for all paths
+    b = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, 16, 16, 3))
+    for m in (5, 10, 20):
+        clients = [Client(spec=spec,
+                          params=cnn_init(jax.random.PRNGKey(i), spec))
+                   for i in range(m)]
+        specs, cparams = split_clients(clients)
+        gspecs, gparams = stack_grouped(clients)
+        f_loop = jax.jit(lambda cp, xb: ensemble_logits(specs, cp, xb))
+        f_grp = jax.jit(
+            lambda gp, xb: grouped_ensemble_logits(gspecs, gp, xb))
+        t_loop, t_grp = time_ab(f_loop, (cparams, x), f_grp, (gparams, x))
+        emit(f"e/ensemble_forward/looped/m{m}", t_loop, f"batch={b}")
+        emit(f"e/ensemble_forward/grouped/m{m}", t_grp,
+             f"batch={b};speedup={t_loop / t_grp:.2f}x")
+
+    # epochs/sec of the two epoch drivers, steady state. Build the jitted
+    # steps ONCE (train_dense_server rebuilds them per call, which would
+    # make every timed call recompile and report compile time as runtime)
+    # and time repeated passes threading the carry through, so donated
+    # buffers stay valid and compile happens only in the warmup pass.
+    from repro.core import generator as G
+    from repro.core.dense import make_dense_steps
+    n = 4
+    scfg = dataclasses.replace(
+        base_cfg(False), n_clients=n, client_kinds=("cnn1",) * n,
+        num_classes=6, image_size=16, width=0.25, nz=16, t_g=2,
+        synth_batch=32, s_steps=1, loop_chunk=4)
+    cspec = CNNSpec(kind="cnn1", num_classes=scfg.num_classes, in_ch=3,
+                    width=scfg.width, image_size=scfg.image_size)
+    clients = [Client(spec=cspec,
+                      params=cnn_init(jax.random.PRNGKey(i), cspec))
+               for i in range(n)]
+    (gen_step, student_step, g_opt, s_opt, gparams, _,
+     epochs_step) = make_dense_steps(clients, cspec, scfg)
+    key = jax.random.PRNGKey(0)
+    k_gen, k_stu, key = jax.random.split(key, 3)
+    gen_p0 = G.img_generator_init(k_gen, nz=scfg.nz,
+                                  img_size=scfg.image_size, out_ch=3)
+    stu_p0 = cnn_init(k_stu, cspec)
+    keys = jax.random.split(key, scfg.loop_chunk)
+    passes = 3 if not full else 8
+
+    def python_pass(state):
+        gen_p, g_state, stu_p, s_state = state
+        b, nz = scfg.synth_batch, scfg.nz
+        for ek in keys:
+            kz, ky, _ = jax.random.split(ek, 3)
+            z = jax.random.normal(kz, (b, nz))
+            yl = jax.random.randint(ky, (b,), 0, scfg.num_classes)
+            for _ in range(scfg.t_g):
+                gen_p, g_state, gl, _ = gen_step(gen_p, g_state, stu_p,
+                                                 gparams, z, yl)
+            stu_p, s_state, dl = student_step(stu_p, s_state, gen_p,
+                                              gparams, z)
+        jax.block_until_ready(dl)
+        return gen_p, g_state, stu_p, s_state
+
+    def fused_pass(state):
+        out = epochs_step(*state, gparams, keys)
+        jax.block_until_ready(out[4]["dis_loss"])
+        return out[:4]
+
+    for mode, one_pass in (("python", python_pass), ("fused", fused_pass)):
+        # fresh copies per mode: epochs_step donates its carry, which
+        # would delete gen_p0/stu_p0 for any later use
+        state = jax.tree.map(jnp.copy, (gen_p0, g_opt.init(gen_p0),
+                                        stu_p0, s_opt.init(stu_p0)))
+        state = one_pass(state)                 # warmup: compile
+        ts = []
+        for _ in range(passes):
+            t0 = time.perf_counter()
+            state = one_pass(state)
+            ts.append(time.perf_counter() - t0)
+        dt = float(np.median(ts))
+        emit(f"e/epochs_per_sec/{mode}", dt,
+             f"epochs={scfg.loop_chunk};eps={scfg.loop_chunk / dt:.2f}")
 
 
 def r_roofline(full: bool):
@@ -188,7 +282,8 @@ def r_roofline(full: bool):
 
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
-          "f3": f3_local_vs_global, "k": k_kernels, "r": r_roofline}
+          "f3": f3_local_vs_global, "k": k_kernels, "e": e_ensemble,
+          "r": r_roofline}
 
 
 def main() -> None:

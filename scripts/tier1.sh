@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf tables in one command:
+#   ./scripts/tier1.sh [extra pytest args]
+# Runs the ROADMAP tier-1 test command, then the kernel (k) and
+# ensemble/epoch-driver (e) benchmark tables so the perf trajectory is
+# captured alongside every verification run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --only k,e

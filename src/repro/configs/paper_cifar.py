@@ -45,6 +45,11 @@ class DenseExperimentConfig:
     s_steps: int = 1                # student steps per epoch. 1 = Algorithm 1
                                     # verbatim; >1 draws fresh noise per step
                                     # (all baselines get the same budget).
+    loop_mode: str = "python"       # epoch driver: "python" (per-step jit,
+                                    # single-core-CPU default) or "fused"
+                                    # (device-resident lax.scan chunks —
+                                    # see core/dense.py).
+    loop_chunk: int = 8             # epochs per fused scan program
     seed: int = 0
 
 

@@ -8,6 +8,8 @@ instantiation lives in repro/launch/dense_llm.py.
 from repro.core.dense import (train_dense_server, make_dense_steps,
                               evaluate, merge_bn_stats, DenseHistory)
 from repro.core.ensemble import (Client, ensemble_logits, split_clients,
+                                 group_clients, stack_grouped,
+                                 grouped_ensemble_logits,
                                  stack_homogeneous, ensemble_logits_stacked)
 from repro.core.losses import (softmax_kl, ce_loss, bn_loss, div_loss,
                                gen_loss, distill_loss)
@@ -17,6 +19,7 @@ from repro.core.generator import (img_generator, img_generator_init,
 __all__ = [
     "train_dense_server", "make_dense_steps", "evaluate", "merge_bn_stats",
     "DenseHistory", "Client", "ensemble_logits", "split_clients",
+    "group_clients", "stack_grouped", "grouped_ensemble_logits",
     "stack_homogeneous", "ensemble_logits_stacked", "softmax_kl", "ce_loss",
     "bn_loss", "div_loss", "gen_loss", "distill_loss", "img_generator",
     "img_generator_init", "tok_generator", "tok_generator_init",

@@ -10,6 +10,30 @@ minimizing KL(D(x̂) ‖ f_S(x̂)).
 Faithful to Algorithm 1 by default (one noise batch per epoch, one student
 step). ``s_steps > 1`` / ``replay=True`` are beyond-paper extensions kept
 off unless asked for (EXPERIMENTS.md reports them separately).
+
+Fast-path design
+----------------
+The frozen ensemble is held in the grouped-vmap representation
+(ensemble.stack_grouped): clients are grouped by CNNSpec at
+``make_dense_steps`` setup and each group is evaluated with a single
+vmapped forward, so the per-step ensemble cost is O(#architectures), not
+O(#clients).
+
+The epoch driver is selected by ``scfg.loop_mode``:
+
+  * ``"python"`` (default) — per-step jit, one host sync (``float``) per
+    metric per epoch. Fastest on single-core CPU hosts where the fused
+    scan compiles slowly.
+  * ``"fused"``  — device-resident: ``scfg.loop_chunk`` epochs are chunked
+    into ONE ``jax.lax.scan`` program with donated carry buffers
+    (gen/student params + optimizer states never round-trip to host) and
+    on-device metric stacking, so the host syncs once per chunk instead
+    of 3× per epoch. The win grows with accelerator dispatch latency.
+
+Both modes derive per-epoch PRNG keys identically
+(``jax.random.split(key, epochs)`` then kz/ky/ks per epoch), so they
+produce the same student up to compilation-order float noise
+(tests/test_fastpath.py asserts agreement).
 """
 from __future__ import annotations
 
@@ -23,7 +47,8 @@ import numpy as np
 
 from repro.core import generator as G
 from repro.core import losses as LS
-from repro.core.ensemble import Client, ensemble_logits, split_clients
+from repro.core.ensemble import (Client, grouped_ensemble_logits,
+                                 stack_grouped)
 from repro.models.cnn import CNNSpec, cnn_apply, cnn_logits, cnn_init
 from repro import optim
 
@@ -48,24 +73,30 @@ class DenseHistory:
 
 def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
                      scfg, *, use_bn: bool = True, use_div: bool = True):
-    """Build jitted (gen_step, student_step) closed over the frozen ensemble.
+    """Build jitted steps closed over the frozen (grouped) ensemble.
+
+    Returns (gen_step, student_step, g_opt, s_opt, gparams, epoch_step,
+    epochs_step): gparams is the grouped-stacked client params
+    (ensemble.stack_grouped) that every step takes as its traced ensemble
+    argument; epochs_step scans epoch_step over a chunk of per-epoch keys
+    with donated carries (the loop_mode="fused" driver).
 
     use_bn / use_div=False reproduce the paper's ablations (Table 6).
     """
     g_opt = optim.adam(scfg.g_lr)
     s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
     img = scfg.image_size
-    specs, cparams = split_clients(clients)
+    gspecs, gparams = stack_grouped(clients)
 
     def gen_forward(gen_p, z):
         return G.img_generator(gen_p, z, img_size=img)
 
     @jax.jit
-    def gen_step(gen_p, g_state, stu_p, cparams, z, y):
+    def gen_step(gen_p, g_state, stu_p, gparams, z, y):
         def loss_fn(gp):
             x = gen_forward(gp, z)
-            avg, stats = ensemble_logits(specs, cparams, x,
-                                         with_bn_stats=True)
+            avg, stats = grouped_ensemble_logits(gspecs, gparams, x,
+                                                 with_bn_stats=True)
             stu = cnn_logits(stu_p, student_spec, x)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats) if use_bn else jnp.zeros(())
@@ -78,9 +109,9 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
         return new_p, new_state, loss, parts
 
     @jax.jit
-    def student_step(stu_p, s_state, gen_p, cparams, z):
+    def student_step(stu_p, s_state, gen_p, gparams, z):
         x = jax.lax.stop_gradient(gen_forward(gen_p, z))
-        avg = ensemble_logits(specs, cparams, x)
+        avg = grouped_ensemble_logits(gspecs, gparams, x)
 
         def loss_fn(sp):
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
@@ -95,17 +126,18 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     s_steps = getattr(scfg, "s_steps", 1)
     nz, b, ncls = scfg.nz, scfg.synth_batch, scfg.num_classes
 
-    @jax.jit
-    def epoch_step(gen_p, g_state, stu_p, s_state, cparams, key):
-        """One Algorithm-1 epoch as a single device program: T_G generator
-        steps (lines 8-11) then the distillation step(s) (lines 13-14)."""
+    def _epoch_body(gen_p, g_state, stu_p, s_state, gparams, key):
+        """One Algorithm-1 epoch: T_G generator steps (lines 8-11) then
+        the distillation step(s) (lines 13-14). Pure-jax; shared by the
+        jitted epoch_step and the fused multi-epoch scan. The python
+        driver mirrors this key derivation exactly."""
         kz, ky, ks = jax.random.split(key, 3)
         z = jax.random.normal(kz, (b, nz))
         y = jax.random.randint(ky, (b,), 0, ncls)
 
         def gbody(carry, _):
             gp, gs = carry
-            gp, gs, loss, parts = gen_step(gp, gs, stu_p, cparams, z, y)
+            gp, gs, loss, parts = gen_step(gp, gs, stu_p, gparams, z, y)
             return (gp, gs), (loss, parts)
 
         (gen_p, g_state), (gl, parts) = jax.lax.scan(
@@ -118,7 +150,7 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
 
         def sbody(carry, z_i):
             sp, ss = carry
-            sp, ss, loss = student_step(sp, ss, gen_p, cparams, z_i)
+            sp, ss, loss = student_step(sp, ss, gen_p, gparams, z_i)
             return (sp, ss), loss
 
         (stu_p, s_state), dl = jax.lax.scan(sbody, (stu_p, s_state), zs)
@@ -127,7 +159,38 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
                    "dis_loss": dl[-1]}
         return gen_p, g_state, stu_p, s_state, metrics
 
-    return gen_step, student_step, g_opt, s_opt, cparams, epoch_step
+    epoch_step = jax.jit(_epoch_body)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+    def epochs_step(gen_p, g_state, stu_p, s_state, gparams, keys):
+        """loop_mode="fused": a chunk of len(keys) epochs as ONE device
+        program. Carries are donated (params/opt states stay resident);
+        per-epoch metrics are stacked on device and fetched by the caller
+        in a single host sync per chunk."""
+        def body(carry, key):
+            gp, gs, sp, ss = carry
+            gp, gs, sp, ss, m = _epoch_body(gp, gs, sp, ss, gparams, key)
+            return (gp, gs, sp, ss), m
+
+        (gen_p, g_state, stu_p, s_state), metrics = jax.lax.scan(
+            body, (gen_p, g_state, stu_p, s_state), keys)
+        return gen_p, g_state, stu_p, s_state, metrics
+
+    return (gen_step, student_step, g_opt, s_opt, gparams, epoch_step,
+            epochs_step)
+
+
+def _chunk_bounds(epochs: int, chunk: int, eval_every: int):
+    """Chunk [0, epochs) into scan programs of <= chunk epochs, never
+    crossing an eval boundary (eval_every=0 disables boundaries)."""
+    bounds, e = [], 0
+    while e < epochs:
+        nxt = min(e + chunk, epochs)
+        if eval_every:
+            nxt = min(nxt, ((e // eval_every) + 1) * eval_every)
+        bounds.append((e, nxt))
+        e = nxt
+    return bounds
 
 
 def train_dense_server(key, clients: Sequence[Client], scfg,
@@ -136,7 +199,12 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
                        use_bn: bool = True, use_div: bool = True,
                        eval_every: int = 0,
                        student_params: dict | None = None):
-    """Run Algorithm 1. Returns (student_params, gen_params, history)."""
+    """Run Algorithm 1. Returns (student_params, gen_params, history).
+
+    scfg.loop_mode selects the epoch driver ("python" per-step jit —
+    the CPU default — or "fused" device-resident chunks of
+    scfg.loop_chunk epochs; see module docstring).
+    """
     student_spec = student_spec or CNNSpec(
         kind=scfg.global_kind, num_classes=scfg.num_classes,
         in_ch=scfg.in_ch, width=scfg.width, image_size=scfg.image_size)
@@ -146,44 +214,102 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
     stu_p = student_params if student_params is not None \
         else cnn_init(k_stu, student_spec)
 
-    (gen_step, student_step, g_opt, s_opt, cparams,
-     epoch_step) = make_dense_steps(clients, student_spec, scfg,
-                                    use_bn=use_bn, use_div=use_div)
+    (gen_step, student_step, g_opt, s_opt, gparams, epoch_step,
+     epochs_step) = make_dense_steps(clients, student_spec, scfg,
+                                     use_bn=use_bn, use_div=use_div)
     g_state = g_opt.init(gen_p)
     s_state = s_opt.init(stu_p)
 
-    # NB: per-step jit (not the fused epoch_step) — on the 1-core CPU host
-    # the fused scan compiles 5x slower and runs 10x slower; on TPU the
-    # fused path would win. Kept selectable for completeness.
     hist = DenseHistory()
     s_steps = getattr(scfg, "s_steps", 1)
-    for epoch in range(scfg.epochs):
-        key, kz, ky = jax.random.split(key, 3)
-        z = jax.random.normal(kz, (scfg.synth_batch, scfg.nz))
-        y = jax.random.randint(ky, (scfg.synth_batch,), 0, scfg.num_classes)
-        for _ in range(scfg.t_g):
-            gen_p, g_state, gl, parts = gen_step(gen_p, g_state, stu_p,
-                                                 cparams, z, y)
-        stu_p, s_state, dl = student_step(stu_p, s_state, gen_p, cparams, z)
-        for _ in range(s_steps - 1):
-            key, kz2 = jax.random.split(key)
-            z2 = jax.random.normal(kz2, (scfg.synth_batch, scfg.nz))
+    loop_mode = getattr(scfg, "loop_mode", "python")
+    loop_chunk = max(1, int(getattr(scfg, "loop_chunk", 8)))
+    # both drivers consume the SAME per-epoch key stream so they are
+    # interchangeable (and testable against each other)
+    epoch_keys = jax.random.split(key, scfg.epochs)
+
+    def maybe_eval(epoch_done):
+        if eval_fn is not None and eval_every and \
+                epoch_done % eval_every == 0:
+            hist.acc.append((epoch_done, eval_fn(stu_p, student_spec)))
+
+    if loop_mode == "fused":
+        for lo, hi in _chunk_bounds(scfg.epochs, loop_chunk, eval_every):
+            gen_p, g_state, stu_p, s_state, metrics = epochs_step(
+                gen_p, g_state, stu_p, s_state, gparams, epoch_keys[lo:hi])
+            m = jax.device_get(metrics)      # ONE host sync per chunk
+            hist.gen_loss.extend(float(v) for v in m["gen_loss"])
+            hist.dis_loss.extend(float(v) for v in m["dis_loss"])
+            hist.gen_parts.extend(
+                {k: float(v[i]) for k, v in m["parts"].items()}
+                for i in range(hi - lo))
+            maybe_eval(hi)
+    elif loop_mode == "python":
+        b, nz = scfg.synth_batch, scfg.nz
+        for epoch in range(scfg.epochs):
+            # identical derivation to _epoch_body
+            kz, ky, ks = jax.random.split(epoch_keys[epoch], 3)
+            z = jax.random.normal(kz, (b, nz))
+            y = jax.random.randint(ky, (b,), 0, scfg.num_classes)
+            for _ in range(scfg.t_g):
+                gen_p, g_state, gl, parts = gen_step(gen_p, g_state, stu_p,
+                                                     gparams, z, y)
             stu_p, s_state, dl = student_step(stu_p, s_state, gen_p,
-                                              cparams, z2)
-        hist.gen_loss.append(float(gl))
-        hist.gen_parts.append({k: float(v) for k, v in parts.items()})
-        hist.dis_loss.append(float(dl))
-        if eval_fn is not None and eval_every and (epoch + 1) % eval_every == 0:
-            hist.acc.append((epoch + 1, eval_fn(stu_p, student_spec)))
+                                              gparams, z)
+            if s_steps > 1:
+                extra = jax.random.normal(ks, (s_steps - 1, b, nz))
+                for j in range(s_steps - 1):
+                    stu_p, s_state, dl = student_step(stu_p, s_state, gen_p,
+                                                      gparams, extra[j])
+            hist.gen_loss.append(float(gl))
+            hist.gen_parts.append({k: float(v) for k, v in parts.items()})
+            hist.dis_loss.append(float(dl))
+            maybe_eval(epoch + 1)
+    else:
+        raise ValueError(f"unknown loop_mode {loop_mode!r} "
+                         "(expected 'python' or 'fused')")
     return stu_p, gen_p, hist
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _eval_correct(params, spec: CNNSpec, xb, yb, mask):
+    """Scan over pre-batched (nb, B, ...) eval data; returns the total
+    correct count as a device scalar (no per-batch host sync)."""
+    def body(tot, inp):
+        xi, yi, mi = inp
+        logits = cnn_logits(params, spec, xi)
+        hit = (jnp.argmax(logits, -1) == yi) & mi
+        return tot + jnp.sum(hit.astype(jnp.int32)), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32), (xb, yb, mask))
+    return tot
+
+
 def evaluate(params, spec: CNNSpec, x: np.ndarray, y: np.ndarray,
-             batch: int = 512) -> float:
-    """Top-1 accuracy, eval-mode BN."""
-    correct = 0
-    fwd = jax.jit(functools.partial(cnn_logits, spec=spec))
-    for i in range(0, len(y), batch):
-        logits = fwd(params, x=jnp.asarray(x[i:i + batch]))
-        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i:i + batch])))
-    return correct / len(y)
+             batch: int = 512, device_batches: int = 64) -> float:
+    """Top-1 accuracy, eval-mode BN.
+
+    Batches are padded to a rectangle and reduced with a jit-scanned
+    program per device chunk of `device_batches` batches; per-chunk
+    correct counts stay on device and the host syncs ONCE at the end —
+    versus one sync per batch before. Chunking keeps device memory
+    bounded at batch*device_batches rows for arbitrarily large eval
+    sets."""
+    x, y = np.asarray(x), np.asarray(y)
+    n = len(y)
+    batch = max(1, min(batch, n))
+    nb = -(-n // batch)
+    pad = nb * batch - n
+    if pad:
+        x = np.concatenate([x, np.zeros((pad, *x.shape[1:]), x.dtype)])
+        y = np.concatenate([y, np.zeros((pad,), y.dtype)])
+    mask = (np.arange(nb * batch) < n).reshape(nb, batch)
+    xb = x.reshape(nb, batch, *x.shape[1:])
+    yb = y.reshape(nb, batch)
+    totals = []
+    for i in range(0, nb, device_batches):
+        totals.append(_eval_correct(params, spec,
+                                    jnp.asarray(xb[i:i + device_batches]),
+                                    jnp.asarray(yb[i:i + device_batches]),
+                                    jnp.asarray(mask[i:i + device_batches])))
+    return int(sum(totals)) / n

@@ -35,15 +35,40 @@ from repro.models import transformer as T
 
 # --------------------------------------------------- heterogeneous (host) --
 
+def group_lm_clients(client_cfgs: Sequence[ArchConfig]):
+    """Group clients by ArchConfig (insertion-ordered, deterministic) —
+    the LM analogue of ensemble.group_clients."""
+    groups: dict[ArchConfig, list[int]] = {}
+    for i, cfg in enumerate(client_cfgs):
+        groups.setdefault(cfg, []).append(i)
+    return [(cfg, tuple(idx)) for cfg, idx in groups.items()]
+
+
 def ensemble_lm_logits(client_cfgs: Sequence[ArchConfig], client_params,
                        embeds, *, mesh=None, dp_axes=()):
-    """D(x̂) over heterogeneous LM clients (python loop; shared vocab)."""
+    """D(x̂) over heterogeneous LM clients (shared vocab).
+
+    Grouped-vmap fast path: identical ArchConfigs are stacked and
+    evaluated with one vmapped forward (stacking happens under jit — the
+    frozen-CNN path stacks at setup instead, see ensemble.stack_grouped);
+    singleton groups run the direct forward."""
     acc = None
-    for cfg, params in zip(client_cfgs, client_params):
-        lg, _, _ = T.forward(params, cfg, embeds=embeds, mesh=mesh,
-                             dp_axes=dp_axes, remat=False)
-        lg = lg.astype(jnp.float32)
-        acc = lg if acc is None else acc + lg
+    for cfg, idx in group_lm_clients(client_cfgs):
+        if len(idx) == 1:
+            lg, _, _ = T.forward(client_params[idx[0]], cfg, embeds=embeds,
+                                 mesh=mesh, dp_axes=dp_axes, remat=False)
+            group_sum = lg.astype(jnp.float32)
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[client_params[i] for i in idx])
+
+            def one(p, _cfg=cfg):
+                lg_k, _, _ = T.forward(p, _cfg, embeds=embeds, mesh=mesh,
+                                       dp_axes=dp_axes, remat=False)
+                return lg_k.astype(jnp.float32)
+
+            group_sum = jnp.sum(jax.vmap(one)(stacked), axis=0)
+        acc = group_sum if acc is None else acc + group_sum
     return acc / len(client_cfgs)
 
 

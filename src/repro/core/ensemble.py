@@ -2,9 +2,24 @@
 
 The paper's key aggregation move: average *logits*, never parameters —
 which is what makes heterogeneous client architectures possible. Clients
-are (CNNSpec, params) pairs; the python loop over clients unrolls under
-jit (m is small server-side), and for homogeneous ensembles a vmapped
-fast path stacks the client params.
+are (CNNSpec, params) pairs.
+
+Two evaluation paths:
+
+  * ``ensemble_logits`` — reference implementation: a python loop over
+    clients that unrolls under jit. Compile size and runtime scale O(m).
+  * ``grouped_ensemble_logits`` — the fast path: clients are grouped by
+    ``CNNSpec`` (``group_clients``), each group's params are stacked once
+    at setup (``stack_grouped``) and the whole group is evaluated with a
+    single ``jax.vmap`` forward — a 20-client homogeneous federation
+    compiles/executes 1 batched forward instead of 20. Singleton groups
+    fall back to a direct (un-vmapped) forward. The ``with_bn_stats``
+    path needed by L_BN (Eq. 3) is supported: per-client stats are
+    unstacked from the vmapped forward so ``losses.bn_loss`` is unchanged.
+
+Grouping reorders clients by first occurrence of their spec; both the
+logit average and L_BN are order-invariant sums over clients, so the two
+paths agree to float tolerance (tests/test_fastpath.py).
 
 On the production mesh the same average is realized as a psum over the
 ensemble mesh axis — see repro/launch/dense_llm.py.
@@ -17,7 +32,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.models.cnn import CNNSpec, cnn_apply
+from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_apply_grouped,
+                              is_conv_stack)
 
 
 @dataclass
@@ -32,10 +48,10 @@ def ensemble_logits(specs: Sequence[CNNSpec], params_list, x: jnp.ndarray,
                     *, with_bn_stats: bool = False):
     """Eq. (1): D(x) = (1/m) sum_k f^k(x). Eval-mode (running BN stats).
 
-    specs are static (shape info); params_list is a traced pytree so jitted
-    callers don't bake client weights in as constants. with_bn_stats
-    additionally returns each client's per-BN-layer batch statistics of x —
-    the inputs to L_BN (Eq. 3).
+    Reference (unrolled) path. specs are static (shape info); params_list
+    is a traced pytree so jitted callers don't bake client weights in as
+    constants. with_bn_stats additionally returns each client's
+    per-BN-layer batch statistics of x — the inputs to L_BN (Eq. 3).
     """
     logits_sum = None
     all_stats = []
@@ -56,13 +72,91 @@ def split_clients(clients: Sequence[Client]):
     return tuple(c.spec for c in clients), [c.params for c in clients]
 
 
+def group_clients(clients: Sequence[Client]):
+    """Group clients by architecture with a deterministic key order.
+
+    -> list of (spec, client_indices) pairs, ordered by the *first
+    occurrence* of each spec (insertion order — never a set, whose
+    iteration order is unstable across processes).
+    """
+    groups: dict[CNNSpec, list[int]] = {}
+    for i, c in enumerate(clients):
+        groups.setdefault(c.spec, []).append(i)
+    return [(spec, tuple(idx)) for spec, idx in groups.items()]
+
+
+def stack_grouped(clients: Sequence[Client]):
+    """Build the grouped-ensemble representation.
+
+    -> (gspecs, gparams) where gspecs is the *static* part — a tuple of
+    (CNNSpec, group_size) — and gparams the *traced* part: one params
+    pytree per group, stacked along a leading client axis for groups of
+    size > 1 and kept flat for singletons (which skip vmap entirely).
+    Stack once at setup; jitted steps then take gparams as an argument so
+    client weights are not baked in as constants.
+    """
+    gspecs, gparams = [], []
+    for spec, idx in group_clients(clients):
+        gspecs.append((spec, len(idx)))
+        if len(idx) == 1:
+            gparams.append(clients[idx[0]].params)
+        else:
+            gparams.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *[clients[i].params for i in idx]))
+    return tuple(gspecs), gparams
+
+
+def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
+                            with_bn_stats: bool = False):
+    """Eq. (1) over the grouped representation — one vmapped forward per
+    architecture group instead of one unrolled forward per client.
+
+    Matches ``ensemble_logits`` up to float tolerance; with_bn_stats
+    returns a flat per-client stats list (group order) compatible with
+    ``losses.bn_loss``, which is order-invariant.
+    """
+    m = sum(size for _, size in gspecs)
+    logits_sum = None
+    all_stats = []
+    for (spec, size), params in zip(gspecs, gparams):
+        if size == 1:
+            lg, _, stats = cnn_apply(params, spec, x, train=False)
+            group_sum = lg.astype(jnp.float32)
+            if with_bn_stats:
+                all_stats.append(stats)
+        else:
+            if is_conv_stack(spec.kind):
+                # fully-fused grouped-channel forward (models/cnn.py)
+                lgs, stacked_stats = cnn_stack_apply_grouped(
+                    params, spec, x, size, with_stats=with_bn_stats)
+                lgs = lgs.astype(jnp.float32)
+            else:
+                def one(p, _spec=spec):
+                    lg_k, _, st_k = cnn_apply(p, _spec, x, train=False)
+                    return lg_k.astype(jnp.float32), st_k
+
+                lgs, stacked_stats = jax.vmap(one)(params)
+            group_sum = jnp.sum(lgs, axis=0)
+            if with_bn_stats:
+                for k in range(size):
+                    all_stats.append(jax.tree.map(lambda a, _k=k: a[_k],
+                                                  stacked_stats))
+        logits_sum = group_sum if logits_sum is None \
+            else logits_sum + group_sum
+    avg = logits_sum / m
+    if with_bn_stats:
+        return avg, all_stats
+    return avg
+
+
 def stack_homogeneous(clients: Sequence[Client]):
     """Stack same-architecture client params for a vmapped ensemble."""
-    specs = {c.spec for c in clients}
-    assert len(specs) == 1, "stack_homogeneous requires identical specs"
+    groups = group_clients(clients)
+    assert len(groups) == 1, "stack_homogeneous requires identical specs"
+    spec, idx = groups[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                           *[c.params for c in clients])
-    return clients[0].spec, stacked
+                           *[clients[i].params for i in idx])
+    return spec, stacked
 
 
 def ensemble_logits_stacked(spec: CNNSpec, stacked: dict, x: jnp.ndarray):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro import optim
 from repro.core import losses as LS
 from repro.core.dense import merge_bn_stats
-from repro.core.ensemble import ensemble_logits, split_clients
+from repro.core.ensemble import grouped_ensemble_logits, stack_grouped
 from repro.core import generator as G
 from repro.models.cnn import CNNSpec, cnn_apply, cnn_init
 
@@ -32,12 +32,14 @@ def _student_spec(scfg) -> CNNSpec:
                    image_size=scfg.image_size)
 
 
-def make_distill_step(specs, student_spec: CNNSpec, scfg):
+def make_distill_step(gspecs, student_spec: CNNSpec, scfg):
+    """Shared Eq.-6 distillation step over the grouped ensemble
+    (gspecs/gparams from ensemble.stack_grouped)."""
     s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
 
     @jax.jit
-    def step(stu_p, s_state, cparams, x):
-        avg = ensemble_logits(specs, cparams, x)
+    def step(stu_p, s_state, gparams, x):
+        avg = grouped_ensemble_logits(gspecs, gparams, x)
 
         def loss_fn(sp):
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
@@ -54,10 +56,10 @@ def make_distill_step(specs, student_spec: CNNSpec, scfg):
 
 def fed_df(key, clients, scfg, student_spec: CNNSpec | None = None):
     student_spec = student_spec or _student_spec(scfg)
-    specs, cparams = split_clients(clients)
+    gspecs, gparams = stack_grouped(clients)
     k_s, key = jax.random.split(key)
     stu_p = cnn_init(k_s, student_spec)
-    step, s_opt = make_distill_step(specs, student_spec, scfg)
+    step, s_opt = make_distill_step(gspecs, student_spec, scfg)
     s_state = s_opt.init(stu_p)
     for _ in range(scfg.epochs):
         for _ in range(getattr(scfg, "s_steps", 1)):
@@ -65,7 +67,7 @@ def fed_df(key, clients, scfg, student_spec: CNNSpec | None = None):
             x = jax.random.uniform(kx, (scfg.synth_batch, scfg.image_size,
                                         scfg.image_size, scfg.in_ch),
                                    jnp.float32, -1.0, 1.0)
-            stu_p, s_state, _ = step(stu_p, s_state, cparams, x)
+            stu_p, s_state, _ = step(stu_p, s_state, gparams, x)
     return stu_p, student_spec
 
 
@@ -74,21 +76,21 @@ def fed_df(key, clients, scfg, student_spec: CNNSpec | None = None):
 def fed_dafl(key, clients, scfg, student_spec: CNNSpec | None = None, *,
              alpha: float = 0.1, beta: float = 5.0):
     student_spec = student_spec or _student_spec(scfg)
-    specs, cparams = split_clients(clients)
+    gspecs, gparams = stack_grouped(clients)
     k_g, k_s, key = jax.random.split(key, 3)
     gen_p = G.img_generator_init(k_g, nz=scfg.nz, img_size=scfg.image_size,
                                  out_ch=scfg.in_ch)
     stu_p = cnn_init(k_s, student_spec)
     g_opt = optim.adam(scfg.g_lr)
     g_state = g_opt.init(gen_p)
-    d_step, s_opt = make_distill_step(specs, student_spec, scfg)
+    d_step, s_opt = make_distill_step(gspecs, student_spec, scfg)
     s_state = s_opt.init(stu_p)
 
     @jax.jit
-    def gen_step(gp, gs, cparams, z):
+    def gen_step(gp, gs, gparams, z):
         def loss_fn(gp):
             x = G.img_generator(gp, z, img_size=scfg.image_size)
-            avg = ensemble_logits(specs, cparams, x)
+            avg = grouped_ensemble_logits(gspecs, gparams, x)
             pseudo = jnp.argmax(avg, -1)
             l_oh = LS.ce_loss(avg, pseudo)                  # one-hot loss
             l_a = -jnp.mean(jnp.abs(avg))                   # activation loss
@@ -104,11 +106,11 @@ def fed_dafl(key, clients, scfg, student_spec: CNNSpec | None = None, *,
         key, kz = jax.random.split(key)
         z = jax.random.normal(kz, (scfg.synth_batch, scfg.nz))
         for _ in range(scfg.t_g):
-            gen_p, g_state, _ = gen_step(gen_p, g_state, cparams, z)
+            gen_p, g_state, _ = gen_step(gen_p, g_state, gparams, z)
         for _ in range(getattr(scfg, "s_steps", 1)):
             x = jax.lax.stop_gradient(
                 G.img_generator(gen_p, z, img_size=scfg.image_size))
-            stu_p, s_state, _ = d_step(stu_p, s_state, cparams, x)
+            stu_p, s_state, _ = d_step(stu_p, s_state, gparams, x)
             key, kz = jax.random.split(key)
             z = jax.random.normal(kz, (scfg.synth_batch, scfg.nz))
     return stu_p, student_spec
@@ -120,18 +122,18 @@ def fed_adi(key, clients, scfg, student_spec: CNNSpec | None = None, *,
             adi_lr: float = 0.05, tv_coef: float = 1e-4, l2_coef: float = 1e-5,
             bn_coef: float = 1.0, refresh_every: int = 20):
     student_spec = student_spec or _student_spec(scfg)
-    specs, cparams = split_clients(clients)
+    gspecs, gparams = stack_grouped(clients)
     k_s, key = jax.random.split(key)
     stu_p = cnn_init(k_s, student_spec)
-    d_step, s_opt = make_distill_step(specs, student_spec, scfg)
+    d_step, s_opt = make_distill_step(gspecs, student_spec, scfg)
     s_state = s_opt.init(stu_p)
     x_opt = optim.adam(adi_lr)
 
     @jax.jit
-    def adi_step(x, xs, cparams, y):
+    def adi_step(x, xs, gparams, y):
         def loss_fn(x):
-            avg, stats = ensemble_logits(specs, cparams, x,
-                                         with_bn_stats=True)
+            avg, stats = grouped_ensemble_logits(
+                gspecs, gparams, x, with_bn_stats=True)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats)
             dx = jnp.diff(x, axis=1)
@@ -154,8 +156,8 @@ def fed_adi(key, clients, scfg, student_spec: CNNSpec | None = None, *,
                                    scfg.num_classes)
             x_state = x_opt.init(x)
         for _ in range(scfg.t_g):
-            x, x_state, _ = adi_step(x, x_state, cparams, y)
+            x, x_state, _ = adi_step(x, x_state, gparams, y)
         for _ in range(getattr(scfg, "s_steps", 1)):
-            stu_p, s_state, _ = d_step(stu_p, s_state, cparams,
+            stu_p, s_state, _ = d_step(stu_p, s_state, gparams,
                                        jax.lax.stop_gradient(x))
     return stu_p, student_spec

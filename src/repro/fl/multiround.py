@@ -4,6 +4,12 @@ Homogeneous clients only (the server must broadcast one global model back).
 Round r: clients warm-start from the round-(r-1) global model, train E
 epochs locally, upload; the server runs DENSE (student warm-started from
 the previous global) and broadcasts.
+
+Because every round's federation is homogeneous, the server loop is the
+best case for the grouped-vmap ensemble (core/ensemble.stack_grouped):
+train_dense_server evaluates all m clients as ONE vmapped forward per
+step, and scfg.loop_mode="fused" additionally keeps each round's E
+server epochs device-resident (core/dense.py).
 """
 from __future__ import annotations
 

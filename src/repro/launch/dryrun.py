@@ -31,7 +31,7 @@ from repro.launch import shardings as SH
 from repro.launch import specs as SP
 from repro.launch import steps as ST
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                               make_production_mesh)
+                               axis_types_kw, make_production_mesh)
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -160,9 +160,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if mesh_shape:  # §Perf: alternate logical meshes over the same chips
         dims = tuple(int(x) for x in mesh_shape.split("x"))
         names = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(
-            dims, names,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh = jax.make_mesh(dims, names, **axis_types_kw(len(dims)))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))

@@ -18,21 +18,27 @@ HBM_BW = 819e9                  # bytes/s
 ICI_BW = 50e9                   # bytes/s per link
 
 
+def axis_types_kw(n_axes: int) -> dict:
+    """{"axis_types": (Auto,)*n} on jax versions that have AxisType
+    (>=0.5), {} on older ones where Auto is the only behaviour anyway."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return {}
+    return {"axis_types": (at.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
     """A tiny mesh over whatever devices exist — for smoke tests."""
     n = len(jax.devices())
     model = min(model, n)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         **axis_types_kw(2))
 
 
 def dp_axes_of(mesh) -> tuple[str, ...]:

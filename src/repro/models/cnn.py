@@ -82,6 +82,202 @@ def _cnn_stack_apply(p, spec, x, train):
     return logits, {"layers": new_layers, "fc": p["fc"]}, stats
 
 
+# ------------------------------------------- grouped (m-client) fast path --
+#
+# Eval-mode forward of m same-spec conv-stack clients as ONE fused network.
+# Two static regimes, picked from the (trace-time) batch size:
+#
+#   * small batch (B < _GROUPED_IM2COL_MAX_B): im2col — every conv becomes
+#     patch extraction (9 shifted slices) + one client-batched einsum, so
+#     the whole ensemble layer is a single wide GEMM. At small B the
+#     per-conv fixed costs dominate the unrolled loop and this is ~2x
+#     faster on CPU.
+#   * large batch: layer 1 is a single conv with client-concatenated
+#     output channels (the input is shared, nothing is duplicated), then
+#     lax.map over the client axis runs the remaining layers as one
+#     compiled body executed m times. At large B all formulations are
+#     conv-FLOP-bound; this one never hits XLA-CPU's slow
+#     feature_group_count path and keeps memory O(1) in m.
+#
+# Both match the unrolled per-client forward to float tolerance.
+
+_GROUPED_IM2COL_MAX_B = 32
+
+
+def _grouped_kernel(w: jnp.ndarray) -> jnp.ndarray:
+    """(m, k, k, c_in, c_out) stacked client kernels -> one
+    (k, k, c_in, m*c_out) kernel with client-major output channels."""
+    m, k1, k2, ci, co = w.shape
+    return jnp.transpose(w, (1, 2, 3, 0, 4)).reshape(k1, k2, ci, m * co)
+
+
+def _bn_eval(bn, pre32, compute_dtype):
+    """layers.batchnorm(train=False) on broadcast-ready stat shapes."""
+    y = (pre32 - bn["mean"]) * jax.lax.rsqrt(bn["var"] + 1e-5)
+    return y.astype(compute_dtype) * bn["scale"].astype(compute_dtype) \
+        + bn["bias"].astype(compute_dtype)
+
+
+def _fold_bn(w: jnp.ndarray, bn) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold eval-mode BN into the conv: conv(x, w') + t == BN(conv(x, w)).
+    Works on stacked ((m,k,k,ci,co), (m,co)) and per-client
+    ((k,k,ci,co), (co,)) params. Legal only when the caller does not
+    need the pre-BN batch stats."""
+    s = bn["scale"] * jax.lax.rsqrt(bn["var"] + 1e-5)
+    t = bn["bias"] - bn["mean"] * s
+    return w * s[..., None, None, None, :], t
+
+
+def _maxpool2(h: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 VALID max pool as 3 fused strided maximums —
+    reduce_window lowers poorly on XLA CPU (~4x the bandwidth cost)."""
+    hh, ww = h.shape[-3] // 2 * 2, h.shape[-2] // 2 * 2
+    h = h[..., :hh, :ww, :]
+    return jnp.maximum(
+        jnp.maximum(h[..., 0::2, 0::2, :], h[..., 0::2, 1::2, :]),
+        jnp.maximum(h[..., 1::2, 0::2, :], h[..., 1::2, 1::2, :]))
+
+
+def _conv3_im2col(h: jnp.ndarray, w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """3x3 SAME conv of m per-client kernels as im2col batched GEMMs.
+
+    h: (B,H,W,Ci) shared input, or (m,B,H,W,Ci) per-client.
+    w: (m, 3, 3, Ci, Co). -> (m, B, H, W, Co).
+
+    Narrow input (first layer, Ci=3): materialize the full 9Ci patch
+    tensor (tiny) and do ONE einsum with K=9Ci — three K=3Ci GEMMs would
+    be too thin and pay 3 accumulation passes over the largest output.
+    Wide input: full 9Ci patches are memory-bound, so pad once,
+    concatenate only the 3 dx-shifts (3Ci) and accumulate 3 GEMMs over
+    dy — 3x less copied volume at a still-wide K."""
+    hh, ww = h.shape[-3], h.shape[-2]
+    pad = [(0, 0)] * (h.ndim - 3) + [(1, 1), (1, 1), (0, 0)]
+    hp = jnp.pad(h, pad)
+    eq = "bhwf,mfo->mbhwo" if h.ndim == 4 else "mbhwf,mfo->mbhwo"
+    if h.shape[-1] < 16:
+        patches = jnp.concatenate(
+            [hp[..., dy:dy + hh, dx:dx + ww, :]
+             for dy in range(3) for dx in range(3)], axis=-1)
+        return jnp.einsum(eq, patches,
+                          w.reshape(m, -1, w.shape[-1]).astype(h.dtype))
+    rows = jnp.concatenate([hp[..., :, dx:dx + ww, :] for dx in range(3)],
+                           axis=-1)                    # (..., H+2, W, 3Ci)
+    out = None
+    for dy in range(3):
+        wf = w[:, dy].reshape(m, -1, w.shape[-1]).astype(h.dtype)
+        part = jnp.einsum(eq, rows[..., dy:dy + hh, :, :], wf)
+        out = part if out is None else out + part
+    return out
+
+
+def _grouped_im2col(stacked, x, m, with_stats):
+    stats = []
+    h = x
+    for lp in stacked["layers"]:
+        if with_stats:
+            pre32 = _conv3_im2col(h, lp["conv"]["w"], m).astype(jnp.float32)
+            stats.append({"mean": jnp.mean(pre32, (1, 2, 3)),
+                          "var": jnp.var(pre32, (1, 2, 3)),
+                          "running_mean": lp["bn"]["mean"],
+                          "running_var": lp["bn"]["var"]})
+            bn_b = jax.tree.map(lambda a: a[:, None, None, None, :],
+                                lp["bn"])
+            h = jax.nn.relu(_bn_eval(bn_b, pre32, x.dtype))
+        else:
+            wf, t = _fold_bn(lp["conv"]["w"], lp["bn"])
+            pre = _conv3_im2col(h, wf, m)
+            h = jax.nn.relu(pre + t[:, None, None, None, :].astype(pre.dtype))
+        if h.shape[2] > 1:           # stop pooling at 1x1 (tiny test images)
+            h = _maxpool2(h)
+    feat = h.reshape(m, h.shape[1], -1)
+    logits = jnp.einsum("mbf,mfk->mbk", feat,
+                        stacked["fc"]["w"].astype(feat.dtype))
+    return logits + stacked["fc"]["b"][:, None, :].astype(logits.dtype), stats
+
+
+def _grouped_conv_scan(stacked, x, m, with_stats):
+    # layer 1: shared input -> one conv, client-concatenated out channels
+    l1 = stacked["layers"][0]
+    if with_stats:
+        w1 = l1["conv"]["w"]
+    else:
+        w1, t1 = _fold_bn(l1["conv"]["w"], l1["bn"])
+    pre = jax.lax.conv_general_dilated(
+        x, _grouped_kernel(w1).astype(x.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    l1_stats = None
+    if with_stats:
+        pre32 = pre.astype(jnp.float32)
+        axes = tuple(range(pre.ndim - 1))
+        l1_stats = {"mean": jnp.mean(pre32, axes).reshape(m, -1),
+                    "var": jnp.var(pre32, axes).reshape(m, -1),
+                    "running_mean": l1["bn"]["mean"],
+                    "running_var": l1["bn"]["var"]}
+        bn_flat = jax.tree.map(lambda a: a.reshape(-1), l1["bn"])
+        h = jax.nn.relu(_bn_eval(bn_flat, pre32, x.dtype))
+    else:
+        h = jax.nn.relu(pre + t1.reshape(-1).astype(pre.dtype))
+    if h.shape[1] > 1:
+        h = _maxpool2(h)
+    b, hh, ww, mc = h.shape
+    h = jnp.transpose(h.reshape(b, hh, ww, m, mc // m),
+                      (3, 0, 1, 2, 4))                        # (m,B,H,W,C)
+
+    def one(args):
+        hi, layers, fc = args
+        st_i = []
+        for lp in layers:
+            if with_stats:
+                w_i = lp["conv"]["w"]
+            else:
+                w_i, t_i = _fold_bn(lp["conv"]["w"], lp["bn"])
+            pre_i = jax.lax.conv_general_dilated(
+                hi, w_i.astype(hi.dtype), (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            if with_stats:
+                p32 = pre_i.astype(jnp.float32)
+                ax = tuple(range(p32.ndim - 1))
+                st_i.append({"mean": jnp.mean(p32, ax),
+                             "var": jnp.var(p32, ax),
+                             "running_mean": lp["bn"]["mean"],
+                             "running_var": lp["bn"]["var"]})
+                hi = jax.nn.relu(_bn_eval(lp["bn"], p32, hi.dtype))
+            else:
+                hi = jax.nn.relu(pre_i + t_i.astype(pre_i.dtype))
+            if hi.shape[1] > 1:
+                hi = _maxpool2(hi)
+        lg = hi.reshape(hi.shape[0], -1) @ fc["w"].astype(hi.dtype)
+        return lg + fc["b"].astype(lg.dtype), st_i
+
+    logits, rest_stats = jax.lax.map(
+        one, (h, stacked["layers"][1:], stacked["fc"]))
+    if not with_stats:
+        return logits, []
+    return logits, [l1_stats] + rest_stats
+
+
+def cnn_stack_apply_grouped(stacked: dict, spec: CNNSpec, x: jnp.ndarray,
+                            m: int, *, with_stats: bool = False):
+    """Fused eval-mode forward of m same-spec conv-stack clients.
+
+    stacked: pytree of client params with a leading client axis
+    (ensemble.stack_grouped). Returns (logits (m, B, K), bn_stats) with
+    stats leaves carrying the leading client dim — the same contract as
+    vmapping cnn_apply; stats is [] when with_stats=False, which also
+    lets the forward fold eval-mode BN into the conv kernels (_fold_bn).
+    Only valid for kinds in _CNN_LAYOUT.
+    """
+    assert spec.kind in _CNN_LAYOUT, spec.kind
+    if x.shape[0] < _GROUPED_IM2COL_MAX_B:
+        return _grouped_im2col(stacked, x, m, with_stats)
+    return _grouped_conv_scan(stacked, x, m, with_stats)
+
+
+def is_conv_stack(kind: str) -> bool:
+    """True for kinds cnn_stack_apply_grouped can fuse."""
+    return kind in _CNN_LAYOUT
+
+
 # --------------------------------------------------------------- ResNet ----
 
 def _basic_init(key, c_in, c_out, stride):

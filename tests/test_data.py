@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import (batches, lm_batches, make_classification_data,
                         make_lm_data)

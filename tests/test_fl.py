@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.ensemble import Client, ensemble_logits, split_clients
 from repro.data.partition import dirichlet_partition
