@@ -12,6 +12,7 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   F3  one-shot FedAvg vs DENSE vs local models               [Figure 3]
   K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
   E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
+  C   client local training looped vs grouped engine         [§Perf]
   R   roofline summary from dry-run artifacts                [§Roofline]
 """
 from __future__ import annotations
@@ -257,6 +258,89 @@ def e_ensemble(full: bool):
              f"epochs={scfg.loop_chunk};eps={scfg.loop_chunk / dt:.2f}")
 
 
+def c_client_training(full: bool):
+    """C: the federation's local-update phase. Per-client python loop
+    (one jitted step per minibatch, host-side slicing) vs the grouped
+    engine (fl/federation: one fused scanned program per architecture
+    group), m ∈ {5,10,20}, homogeneous cnn1 and 2-group cnn1/cnn2
+    heterogeneous. Both sides run the IDENTICAL seeded schedule on
+    ragged shards (n=40, batch=16 -> two full + one half batch per
+    epoch); time_ab interleaves the passes; the grouped side re-stacks
+    inits and rebuilds its batch plan every pass (that host work is part
+    of the engine's cost). Sized at the CI-scale client spec the tier-1
+    suite trains (image 8, width 0.25) — the per-step-fixed-cost /
+    dispatch-dominated regime the grouped engine targets; at
+    paper-scale widths on this 1-2-core CPU host both paths are
+    conv-FLOP-bound and converge (re-benchmark on an accelerator
+    backend, see ROADMAP). Reported derived values: µs per real
+    optimizer step and whole-federation clients/sec."""
+    from repro.data.pipeline import batches, build_batch_plan, pad_shards
+    from repro.fl.client import make_grouped_local_update, make_local_step
+    from repro.fl.federation import group_specs
+    from repro.models.cnn import CNNSpec, cnn_init
+
+    n_per, batch, epochs = 40, 16, 2
+    steps_per_client = epochs * (-(-n_per // batch))
+    rng = np.random.default_rng(0)
+
+    def spec_of(kind):
+        return CNNSpec(kind=kind, num_classes=6, in_ch=3, width=0.25,
+                       image_size=8)
+
+    for m in (5, 10, 20):
+        for variant in ("homog", "hetero2"):
+            kinds = ("cnn1",) * m if variant == "homog" else \
+                tuple("cnn1" if i % 2 == 0 else "cnn2" for i in range(m))
+            specs = [spec_of(k) for k in kinds]
+            shards = [(rng.standard_normal((n_per, 8, 8, 3))
+                       .astype(np.float32), rng.integers(0, 6, n_per))
+                      for _ in range(m)]
+            inits = [cnn_init(jax.random.PRNGKey(i), s)
+                     for i, s in enumerate(specs)]
+            groups = group_specs(specs)
+            zeros_marg = jnp.zeros((6,))
+            group_data = [(spec, idx, *pad_shards([shards[i] for i in idx]))
+                          for spec, idx in groups]
+
+            def looped_pass():
+                for spec, idx in groups:
+                    step, opt = make_local_step(spec, lr=0.01, momentum=0.9,
+                                                use_ldam=False)
+                    for i in idx:
+                        p, st = inits[i], opt.init(inits[i])
+                        for bx, by in batches(*shards[i], batch, seed=i,
+                                              epochs=epochs):
+                            p, st, loss = step(p, st, jnp.asarray(bx),
+                                               jnp.asarray(by), zeros_marg)
+                jax.block_until_ready(loss)
+
+            def grouped_pass():
+                for spec, idx, xs, ys in group_data:
+                    run, opt = make_grouped_local_update(
+                        spec, lr=0.01, momentum=0.9, use_ldam=False)
+                    plan = build_batch_plan([n_per] * len(idx), batch,
+                                            epochs=epochs,
+                                            seeds=list(idx))
+                    stacked0 = jax.tree.map(
+                        lambda *a: jnp.stack(a), *[inits[i] for i in idx])
+                    p, s, losses = run(stacked0, opt.init(stacked0),
+                                       jnp.asarray(xs), jnp.asarray(ys),
+                                       jnp.asarray(plan.idx),
+                                       jnp.asarray(plan.mask),
+                                       jnp.zeros((len(idx), 6)))
+                jax.block_until_ready(losses)
+
+            t_loop, t_grp = time_ab(looped_pass, (), grouped_pass, (),
+                                    warmup=2, iters=7 if not full else 15)
+            total_steps = m * steps_per_client
+            for name, t in (("looped", t_loop), ("grouped", t_grp)):
+                emit(f"c/local_train/{name}/{variant}/m{m}",
+                     t / total_steps,
+                     f"clients_per_sec={m / t:.2f};steps={total_steps}")
+            emit(f"c/local_train/speedup/{variant}/m{m}", 0.0,
+                 f"grouped_over_looped={t_loop / t_grp:.2f}x")
+
+
 def r_roofline(full: bool):
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     files = sorted(glob.glob(os.path.join(
@@ -283,7 +367,7 @@ def r_roofline(full: bool):
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
           "f3": f3_local_vs_global, "k": k_kernels, "e": e_ensemble,
-          "r": r_roofline}
+          "c": c_client_training, "r": r_roofline}
 
 
 def main() -> None:

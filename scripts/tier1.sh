@@ -1,11 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf tables in one command:
-#   ./scripts/tier1.sh [extra pytest args]
-# Runs the ROADMAP tier-1 test command, then the kernel (k) and
-# ensemble/epoch-driver (e) benchmark tables so the perf trajectory is
-# captured alongside every verification run.
+#   ./scripts/tier1.sh [--fast] [extra pytest args]
+#
+# Default: the ROADMAP tier-1 test command, then the kernel (k),
+# ensemble/epoch-driver (e) and grouped-client-training (c) benchmark
+# tables so the perf trajectory is captured alongside every
+# verification run.
+#
+# --fast: tight-time-budget gate — skips tests marked `slow` (the long
+# grouped-vs-python equivalence sweeps, see tests/conftest.py) and the
+# benchmark tables.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not slow" "$@"
+  exit 0
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --only k,e
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --only k,e,c

@@ -50,6 +50,11 @@ class DenseExperimentConfig:
                                     # (device-resident lax.scan chunks —
                                     # see core/dense.py).
     loop_chunk: int = 8             # epochs per fused scan program
+    client_loop_mode: str = "grouped"  # LocalUpdate driver: "grouped"
+                                    # (one vmapped+scanned program per
+                                    # architecture group — fl/federation)
+                                    # or "python" (per-client reference
+                                    # loop; equivalence ground truth).
     seed: int = 0
 
 

@@ -3,7 +3,8 @@
 Two-stage data-free one-shot FL (Algorithm 1): generator training against
 the client-model ensemble (losses.py, generator.py, ensemble.py) followed
 by ensemble->student distillation (dense.py). The LLM-scale distributed
-instantiation lives in repro/launch/dense_llm.py.
+instantiation lives in repro/core/dense_llm.py (launched via
+repro/launch/).
 """
 from repro.core.dense import (train_dense_server, make_dense_steps,
                               evaluate, merge_bn_stats, DenseHistory)

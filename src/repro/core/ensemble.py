@@ -22,7 +22,8 @@ logit average and L_BN are order-invariant sums over clients, so the two
 paths agree to float tolerance (tests/test_fastpath.py).
 
 On the production mesh the same average is realized as a psum over the
-ensemble mesh axis — see repro/launch/dense_llm.py.
+ensemble mesh axis — see repro/core/dense_llm.py (and launch/mesh.py for
+the axis layout).
 """
 from __future__ import annotations
 
@@ -94,7 +95,16 @@ def stack_grouped(clients: Sequence[Client]):
     size > 1 and kept flat for singletons (which skip vmap entirely).
     Stack once at setup; jitted steps then take gparams as an argument so
     client weights are not baked in as constants.
+
+    A federation built by the grouped client-training engine
+    (fl/federation.ClientList) already IS this representation — its
+    prebuilt (gspecs, gparams) is returned as-is, so params trained on
+    the stacked client axis flow into the ensemble without an
+    unstack/restack round trip through host memory.
     """
+    pre = getattr(clients, "grouped", None)
+    if pre is not None:
+        return pre
     gspecs, gparams = [], []
     for spec, idx in group_clients(clients):
         gspecs.append((spec, len(idx)))

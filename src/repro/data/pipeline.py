@@ -1,5 +1,19 @@
-"""Seeded minibatch iterators (numpy host-side; arrays are device_put by jit)."""
+"""Seeded minibatch iterators and host-side batch *plans*.
+
+``batches`` is the reference per-client iterator (numpy host-side; arrays
+are device_put by jit). ``build_batch_plan`` precomputes the SAME seeded
+index stream for a whole group of clients at once as one padded
+``(m, steps, batch)`` tensor + validity mask, so the grouped local-update
+engine (fl/client.local_update_grouped) can gather every minibatch on
+device inside a single scanned program instead of slicing on the host
+m x epochs x batches times. The two formulations consume identical
+per-client permutation streams: ``np.random.default_rng(seed)`` with one
+``permutation(n)`` call per epoch.
+"""
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
 
 import numpy as np
 
@@ -14,6 +28,73 @@ def batches(x: np.ndarray, y: np.ndarray, batch_size: int, *, seed: int,
         for i in range(0, end, batch_size):
             sel = perm[i:i + batch_size]
             yield x[sel], y[sel]
+
+
+@dataclass(frozen=True)
+class BatchPlan:
+    """Precomputed minibatch schedule for m clients training in lockstep.
+
+    idx[k, s]  — sample indices into client k's (padded) shard for step s.
+    mask[k, s] — True where the slot holds a real sample. A ragged final
+                 batch is padded with index 0 and mask False; clients with
+                 fewer batches per epoch than the group max get fully
+                 masked steps (their params/opt state pass through
+                 unchanged — see fl/client.make_grouped_local_update).
+    """
+    idx: np.ndarray            # (m, steps, batch) int32
+    mask: np.ndarray           # (m, steps, batch) bool
+    steps_per_epoch: int       # group max batches per epoch
+    epochs: int
+    batch_size: int
+
+    @property
+    def steps(self) -> int:
+        return self.idx.shape[1]
+
+
+def build_batch_plan(shard_sizes: Sequence[int], batch_size: int, *,
+                     epochs: int, seeds: Sequence[int]) -> BatchPlan:
+    """Pad each client's shard schedule to the group's max batches/epoch
+    and precompute every epoch's seeded permutation up front.
+
+    Per client k the flattened (idx, mask) stream restricted to valid
+    slots is EXACTLY the ``batches(..., seed=seeds[k], epochs=epochs)``
+    index stream (drop_last=False), so grouped and per-client training
+    consume identical data orderings.
+    """
+    assert len(shard_sizes) == len(seeds)
+    m = len(shard_sizes)
+    nb = [-(-int(n) // batch_size) for n in shard_sizes]   # ceil
+    nb_max = max(nb) if nb else 0
+    steps = epochs * nb_max
+    idx = np.zeros((m, steps, batch_size), np.int32)
+    mask = np.zeros((m, steps, batch_size), bool)
+    for k, (n, seed) in enumerate(zip(shard_sizes, seeds)):
+        rng = np.random.default_rng(seed)
+        for e in range(epochs):
+            perm = rng.permutation(int(n))
+            for j in range(nb[k]):
+                sel = perm[j * batch_size:(j + 1) * batch_size]
+                s = e * nb_max + j
+                idx[k, s, :len(sel)] = sel
+                mask[k, s, :len(sel)] = True
+    return BatchPlan(idx=idx, mask=mask, steps_per_epoch=nb_max,
+                     epochs=epochs, batch_size=batch_size)
+
+
+def pad_shards(shards: Sequence[tuple]) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged per-client shards [(x_k, y_k), ...] into rectangular
+    (m, max_n, ...) arrays, zero-padded past each client's n_k. Padding
+    rows are never gathered by a BatchPlan (all plan indices < n_k)."""
+    m = len(shards)
+    max_n = max(len(y) for _, y in shards)
+    x0, y0 = shards[0]
+    xs = np.zeros((m, max_n, *x0.shape[1:]), x0.dtype)
+    ys = np.zeros((m, max_n), y0.dtype)
+    for k, (x, y) in enumerate(shards):
+        xs[k, :len(y)] = x
+        ys[k, :len(y)] = y
+    return xs, ys
 
 
 def lm_batches(tokens: np.ndarray, batch: int, seq: int, *, seed: int,

@@ -1,9 +1,16 @@
-from repro.fl.client import local_update, make_local_step
-from repro.fl.fedavg import fedavg
+from repro.fl.client import (local_update, local_update_grouped,
+                             make_grouped_local_update, make_local_step)
+from repro.fl.fedavg import fedavg, fedavg_stacked
+from repro.fl.federation import (ClientList, build_grouped_federation,
+                                 client_specs, group_specs,
+                                 train_clients_grouped)
 from repro.fl.protocol import CommLedger, build_federation, param_bytes
 from repro.fl.baselines import fed_df, fed_dafl, fed_adi, make_distill_step
 from repro.fl.multiround import dense_multi_round
 
-__all__ = ["local_update", "make_local_step", "fedavg", "CommLedger",
-           "build_federation", "param_bytes", "fed_df", "fed_dafl",
-           "fed_adi", "make_distill_step", "dense_multi_round"]
+__all__ = ["local_update", "local_update_grouped",
+           "make_grouped_local_update", "make_local_step", "fedavg",
+           "fedavg_stacked", "ClientList", "build_grouped_federation",
+           "client_specs", "group_specs", "train_clients_grouped",
+           "CommLedger", "build_federation", "param_bytes", "fed_df",
+           "fed_dafl", "fed_adi", "make_distill_step", "dense_multi_round"]

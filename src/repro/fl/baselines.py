@@ -11,7 +11,11 @@
                   CE + BN-statistics + TV + L2 priors, then distill.
 
 All baselines share DENSE's distillation step (Eq. 6) and the same student
-budget — matching the paper's "same setting for all methods".
+budget — matching the paper's "same setting for all methods". Client
+setup also matches: every method consumes the federation built by
+``fl.protocol.build_federation`` (the grouped client-training engine by
+default), and ``stack_grouped`` below receives the engine's stacked
+params directly — no per-method restacking.
 """
 from __future__ import annotations
 

@@ -1,5 +1,24 @@
 """Client-side LocalUpdate (paper §3.1.4: SGD, lr=0.01, momentum=0.9,
-b=128, E epochs; optionally LDAM [1] for imbalanced local data)."""
+b=128, E epochs; optionally LDAM [1] for imbalanced local data).
+
+Two drivers:
+
+  * ``local_update`` — the per-client reference: a host-side python loop
+    over seeded minibatches, one jitted step per dispatch. Cost scales
+    O(epochs x batches) dispatches *per client*.
+  * ``local_update_grouped`` — the grouped engine: m same-architecture
+    clients train as ONE compiled program. The SGD/LDAM step is batched
+    over the client axis (fused im2col GEMMs for conv-stack kinds,
+    ``jax.vmap`` for residual kinds — see ``group_step``) and
+    ``jax.lax.scan`` walks a precomputed ``data.pipeline.BatchPlan``
+    with donated carries, so the whole local phase is a single dispatch
+    per group. Ragged shards are handled by masking: masked CE/LDAM
+    means, masked BatchNorm batch statistics (models.cnn ``sample_mask``),
+    and fully-masked padding steps that pass params/optimizer state
+    through untouched. Consumes the identical per-client permutation
+    stream as the python reference, so the two agree to float tolerance
+    (tests/test_federation.py).
+"""
 from __future__ import annotations
 
 import functools
@@ -10,11 +29,16 @@ import numpy as np
 
 from repro import optim
 from repro.core.dense import merge_bn_stats
-from repro.data.pipeline import batches
-from repro.models.cnn import CNNSpec, cnn_apply
+from repro.data.pipeline import BatchPlan, batches, build_batch_plan
+from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_train_grouped,
+                              is_conv_stack)
 
 
+@functools.lru_cache(maxsize=None)
 def make_local_step(spec: CNNSpec, *, lr, momentum, use_ldam=False):
+    """One jitted LocalUpdate step. Cached on (spec, lr, momentum,
+    use_ldam) so a python loop over same-architecture clients reuses one
+    compiled step instead of recompiling per client."""
     opt = optim.sgd(lr, momentum=momentum)
 
     @jax.jit
@@ -53,3 +77,147 @@ def local_update(params, spec: CNNSpec, x: np.ndarray, y: np.ndarray, *,
                                    jnp.asarray(by), margins)
         losses.append(float(loss))
     return params, {"loss": losses, "class_counts": counts}
+
+
+# ------------------------------------------------- grouped local update ---
+
+@functools.lru_cache(maxsize=None)
+def make_grouped_local_update(spec: CNNSpec, *, lr, momentum,
+                              use_ldam=False, has_padding_steps=True):
+    """Build the one-program-per-group LocalUpdate engine.
+
+    Returns (run, opt). ``run(stacked_p, stacked_s, xs, ys, idx, mask,
+    margins) -> (stacked_p, stacked_s, losses)`` where every argument
+    carries a leading client axis of size m:
+
+      stacked_p / stacked_s — params / SGD state, donated (buffers stay
+        device-resident across the whole local phase);
+      xs (m, n, H, W, C), ys (m, n) — padded shards (pipeline.pad_shards);
+      idx / mask (m, steps, batch)  — the BatchPlan;
+      margins (m, num_classes)      — per-client LDAM margins (zeros when
+        use_ldam=False).
+
+    losses is (steps, m) with zeros at fully-masked padding steps.
+
+    has_padding_steps=False (a static property of the BatchPlan: every
+    client has the group-max batches per epoch) compiles out the
+    padding-step passthrough selects — partial-batch masking is
+    unaffected.
+    """
+    opt = optim.sgd(lr, momentum=momentum)
+    fused = is_conv_stack(spec.kind)
+
+    def per_client_losses(logits, by, bmask, margins):
+        """(m,) masked per-client CE/LDAM means; summing them gives every
+        client its own reference gradient (params are disjoint)."""
+        if use_ldam:
+            return jax.vmap(
+                lambda lg, yy, mg, bm: optim.ldam_loss(lg, yy, mg,
+                                                       sample_mask=bm)
+            )(logits, by, margins, bmask)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, by[..., None], -1)[..., 0]
+        w = bmask.astype(jnp.float32)
+        return jnp.sum(nll * w, -1) / jnp.maximum(jnp.sum(w, -1), 1.0)
+
+    def group_step(p, s, bx, by, bmask, margins):
+        """One masked SGD/LDAM step for the whole stacked group.
+
+        Conv-stack kinds run the fused im2col forward
+        (models.cnn.cnn_stack_train_grouped): every conv is a
+        client-batched GEMM whose backward is again GEMMs — on XLA CPU
+        vastly faster than vmapping cnn_apply, whose batched-kernel conv
+        gradients lower to the pathological grouped-convolution path.
+        Residual kinds fall back to the vmapped per-client step.
+        """
+        def loss_fn(p_):
+            if fused:
+                logits, new_p, _ = cnn_stack_train_grouped(p_, spec, bx,
+                                                           bmask)
+            else:
+                logits, new_p, _ = jax.vmap(
+                    lambda pk, xk, mk: cnn_apply(pk, spec, xk, train=True,
+                                                 sample_mask=mk)
+                )(p_, bx, bmask)
+            per = per_client_losses(logits, by, bmask, margins)
+            return jnp.sum(per), (new_p, per)
+
+        (_, (stats_p, per)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p)
+        new_p, new_s = opt.update(grads, s, p)
+        new_p = merge_bn_stats(new_p, stats_p)
+        if not has_padding_steps:
+            return new_p, new_s, per
+        # padding steps (no valid samples for client k): params AND
+        # optimizer state pass through untouched — momentum must not
+        # decay on steps the python reference never takes
+        valid = jnp.any(bmask, -1)                  # (m,)
+
+        def keep(a, b):
+            return jnp.where(valid.reshape((-1,) + (1,) * (a.ndim - 1)),
+                             a, b)
+
+        new_p = jax.tree.map(keep, new_p, p)
+        new_s = jax.tree.map(keep, new_s, s)
+        return new_p, new_s, jnp.where(valid, per, 0.0)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def run(stacked_p, stacked_s, xs, ys, idx, mask, margins):
+        plan = (jnp.swapaxes(idx, 0, 1), jnp.swapaxes(mask, 0, 1))
+
+        def body(carry, inp):
+            p, s = carry
+            bidx, bmask = inp                       # (m, batch) each
+            bx = jax.vmap(lambda x_k, bi: x_k[bi])(xs, bidx)
+            by = jax.vmap(lambda y_k, bi: y_k[bi])(ys, bidx)
+            p, s, loss = group_step(p, s, bx, by, bmask, margins)
+            return (p, s), loss
+
+        (stacked_p, stacked_s), losses = jax.lax.scan(
+            body, (stacked_p, stacked_s), plan)
+        return stacked_p, stacked_s, losses
+
+    return run, opt
+
+
+def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
+                         plan: BatchPlan, *, lr: float = 0.01,
+                         momentum: float = 0.9, use_ldam: bool = False,
+                         num_classes: int = 10,
+                         class_counts: np.ndarray | None = None):
+    """Train m same-spec clients as one compiled program.
+
+    stacked_params: client params stacked on a leading axis (DONATED —
+    invalidated by the call). xs/ys: padded shards. plan: the shared
+    BatchPlan. class_counts (m, num_classes): real per-shard label counts
+    (required for LDAM margins; also returned in info).
+
+    Returns (stacked_params, info) mirroring ``local_update``'s contract,
+    with info["loss"] of shape (steps, m) as a device array.
+    """
+    m = plan.idx.shape[0]
+    if class_counts is None:
+        # real shard sizes recoverable from the plan: each sample appears
+        # exactly once per epoch (pad_shards keeps real rows first)
+        sizes = plan.mask[:, :plan.steps_per_epoch].reshape(m, -1).sum(1)
+        class_counts = np.stack(
+            [np.bincount(np.asarray(ys[k][:int(sizes[k])]),
+                         minlength=num_classes) for k in range(m)])
+    if use_ldam:
+        margins = jnp.stack([optim.class_margins(jnp.asarray(c))
+                             for c in class_counts])
+    else:
+        margins = jnp.zeros((m, num_classes))
+    has_padding = bool((~plan.mask.any(-1)).any())
+    run, opt = make_grouped_local_update(spec, lr=lr, momentum=momentum,
+                                         use_ldam=use_ldam,
+                                         has_padding_steps=has_padding)
+    state = opt.init(stacked_params)
+    stacked_params, _, losses = run(stacked_params, state, jnp.asarray(xs),
+                                    jnp.asarray(ys), jnp.asarray(plan.idx),
+                                    jnp.asarray(plan.mask), margins)
+    return stacked_params, {"loss": losses, "class_counts": class_counts}
+
+
+__all__ = ["make_local_step", "local_update", "make_grouped_local_update",
+           "local_update_grouped", "build_batch_plan"]

@@ -1,13 +1,47 @@
 """FedAvg aggregation [44] — the paper's primary baseline (homogeneous
-models only; Table 2 omits it for heterogeneous federations)."""
+models only; Table 2 omits it for heterogeneous federations).
+
+The aggregation itself is ONE jitted weighted tree-reduce over the
+stacked client axis (``fedavg_stacked``). ``fedavg`` keeps the
+list-of-clients API: when the federation was built by the grouped engine
+(fl/federation.ClientList) the already-stacked group params are reduced
+directly; otherwise the client trees are stacked once here.
+"""
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.ensemble import Client
+
+
+def _check_n_data(n_data) -> np.ndarray:
+    n = np.asarray(n_data, np.float64)
+    if n.size == 0 or np.any(n <= 0):
+        raise ValueError("FedAvg weights are n_k / n; every client must "
+                         f"report n_data > 0, got {list(n_data)}")
+    return n
+
+
+@jax.jit
+def _weighted_reduce(stacked, w):
+    """theta_S = sum_k w_k theta^k over the leading (client) axis."""
+    def avg(leaf):
+        wf = w.astype(jnp.float32).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(wf * leaf.astype(jnp.float32), 0).astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked)
+
+
+def fedavg_stacked(stacked_params, n_data) -> dict:
+    """FedAvg over params stacked on a leading client axis — the grouped
+    engine's native representation. n_data: per-client example counts
+    (must be positive; they define the weights n_k / n)."""
+    n = _check_n_data(n_data)
+    return _weighted_reduce(stacked_params, jnp.asarray(n / n.sum()))
 
 
 def fedavg(clients: Sequence[Client]) -> dict:
@@ -16,11 +50,13 @@ def fedavg(clients: Sequence[Client]) -> dict:
     if len(kinds) != 1:
         raise ValueError("FedAvg requires homogeneous client models; got "
                          f"{[c.spec.kind for c in clients]}")
-    n = sum(c.n_data for c in clients)
-    ws = [c.n_data / n for c in clients]
-
-    def avg(*leaves):
-        acc = sum(w * leaf.astype(jnp.float32) for w, leaf in zip(ws, leaves))
-        return acc.astype(leaves[0].dtype)
-
-    return jax.tree.map(avg, *[c.params for c in clients])
+    n_data = [c.n_data for c in clients]
+    grouped = getattr(clients, "grouped", None)
+    if grouped is not None and len(grouped[0]) == 1 \
+            and grouped[0][0][1] == len(clients) and len(clients) > 1:
+        # grouped-engine federation: reduce the stacked axis directly
+        return fedavg_stacked(grouped[1][0], n_data)
+    _check_n_data(n_data)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[c.params for c in clients])
+    return fedavg_stacked(stacked, n_data)

@@ -1,0 +1,163 @@
+"""Grouped client-training engine: the federation's local-update phase,
+owned end-to-end — partition -> batch plan -> grouped training -> upload.
+
+DENSE's one communication round (§3.1.4 LocalUpdate) used to be simulated
+one client at a time: a python loop over m clients, each a python loop
+over epochs x batches jitted steps. This module groups clients by
+architecture (the same move core/ensemble.py makes for the *server's*
+view) and trains each group as ONE compiled program:
+
+  * ``data.pipeline.build_batch_plan`` precomputes every client's seeded
+    minibatch schedule as one padded (m, steps, batch) index tensor with
+    a validity mask;
+  * ``fl.client.local_update_grouped`` vmaps the masked SGD/LDAM step
+    over the client axis and scans the plan with donated carries;
+  * the trained stacked params become the grouped-ensemble representation
+    *directly*: ``ClientList.grouped`` hands (gspecs, gparams) to
+    ``core.ensemble.stack_grouped`` with no unstack/restack through host
+    memory, and ``fl.fedavg.fedavg`` reduces the same stacked axis.
+
+Per-client ``Client`` views (materialized once per client by slicing the
+stacked arrays — grouped consumers never touch them, but per-client
+evaluation, FedAvg's listwise fallback and the equivalence tests do)
+keep the original list-of-clients API working for everything downstream.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ensemble import Client
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import build_batch_plan, pad_shards
+from repro.fl.client import local_update_grouped
+from repro.models.cnn import CNNSpec, cnn_init
+
+
+class ClientList(list):
+    """Per-client ``Client`` views + the grouped stacked representation.
+
+    ``grouped`` is a (gspecs, gparams) pair in ``stack_grouped``'s exact
+    contract — a tuple of (CNNSpec, group_size) plus one params pytree
+    per group (stacked leading client axis for groups of size > 1, flat
+    for singletons). ``stack_grouped`` returns it as-is, so the params
+    trained by the grouped engine flow into the server's ensemble without
+    a round trip through per-client trees.
+    """
+
+    def __init__(self, clients: Sequence[Client], gspecs, gparams):
+        super().__init__(clients)
+        self.grouped = (tuple(gspecs), gparams)
+
+
+def client_specs(scfg) -> list[CNNSpec]:
+    """The federation's client architectures (scfg.client_kinds cycled)."""
+    return [CNNSpec(kind=scfg.client_kinds[i % len(scfg.client_kinds)],
+                    num_classes=scfg.num_classes, in_ch=scfg.in_ch,
+                    width=scfg.width, image_size=scfg.image_size)
+            for i in range(scfg.n_clients)]
+
+
+def group_specs(specs: Sequence[CNNSpec]):
+    """Group client indices by architecture, first-occurrence ordered —
+    the spec-level analogue of ``core.ensemble.group_clients``."""
+    groups: dict[CNNSpec, list[int]] = {}
+    for i, spec in enumerate(specs):
+        groups.setdefault(spec, []).append(i)
+    return [(spec, tuple(idx)) for spec, idx in groups.items()]
+
+
+def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
+                          *, epochs: int, lr: float, momentum: float,
+                          batch_size: int, use_ldam: bool, num_classes: int,
+                          seeds: Sequence[int],
+                          init_keys: Sequence | None = None,
+                          init_params: Sequence[dict] | None = None,
+                          n_data: Sequence[int] | None = None,
+                          ledger=None,
+                          upload_tag: str = "round0-model-upload"
+                          ) -> ClientList:
+    """Run the grouped LocalUpdate phase over an arbitrary federation.
+
+    specs/shards/seeds are per-client (federation order). Initial params
+    come from ``init_params[i]`` when given (multi-round warm starts),
+    else ``cnn_init(init_keys[i], spec)`` — the same per-client keys the
+    python reference uses, so both paths start identically. Records one
+    'up' ledger event per client with that client's byte count (the
+    one-shot property — m uploads, zero broadcasts — is preserved under
+    grouped training).
+    """
+    from repro.fl.protocol import param_bytes   # lazy: protocol routes here
+    m = len(specs)
+    assert init_params is not None or init_keys is not None
+    if n_data is None:
+        n_data = [len(y) for _, y in shards]
+    groups = group_specs(specs)
+    gspecs = [(spec, len(idx)) for spec, idx in groups]
+    gparams: list = []
+    params_view: list = [None] * m
+    counts_view: list = [None] * m
+    for spec, idx in groups:
+        per = [init_params[i] if init_params is not None
+               else cnn_init(init_keys[i], spec) for i in idx]
+        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        group_shards = [shards[i] for i in idx]
+        sizes = [len(y) for _, y in group_shards]
+        xs, ys = pad_shards(group_shards)
+        plan = build_batch_plan(sizes, batch_size, epochs=epochs,
+                                seeds=[seeds[i] for i in idx])
+        counts = np.stack([np.bincount(y, minlength=num_classes)
+                           for _, y in group_shards])
+        trained, _ = local_update_grouped(
+            stacked0, spec, xs, ys, plan, lr=lr, momentum=momentum,
+            use_ldam=use_ldam, num_classes=num_classes, class_counts=counts)
+        size = len(idx)
+        if size == 1:
+            trained = jax.tree.map(lambda a: a[0], trained)
+            gparams.append(trained)
+            params_view[idx[0]] = trained
+        else:
+            gparams.append(trained)
+            for j, i in enumerate(idx):
+                params_view[i] = jax.tree.map(lambda a, _j=j: a[_j], trained)
+        for j, i in enumerate(idx):
+            counts_view[i] = counts[j]
+        if ledger is not None:
+            per_client_bytes = param_bytes(gparams[-1]) // size
+            for i in idx:
+                ledger.record("up", f"client{i}", per_client_bytes,
+                              upload_tag)
+    clients = [Client(spec=specs[i], params=params_view[i],
+                      n_data=int(n_data[i]), class_counts=counts_view[i])
+               for i in range(m)]
+    return ClientList(clients, gspecs, gparams)
+
+
+def build_grouped_federation(key, scfg, data, *, ledger=None, seed: int = 0):
+    """Grouped-engine drop-in for ``fl.protocol.build_federation``:
+    Dirichlet partition, grouped local training, one upload per client.
+
+    Returns (clients, shards) with clients a ``ClientList`` whose
+    ``grouped`` representation feeds ``stack_grouped`` directly. Uses the
+    same per-client init keys and batch seeds as the python reference, so
+    the two paths agree to float tolerance.
+    """
+    x, y = data["train"]
+    parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
+    shards = [(x[idx], y[idx]) for idx in parts]
+    specs = client_specs(scfg)
+    keys = jax.random.split(key, scfg.n_clients)
+    clients = train_clients_grouped(
+        specs, shards, epochs=scfg.local_epochs, lr=scfg.local_lr,
+        momentum=scfg.local_momentum, batch_size=scfg.batch_size,
+        use_ldam=scfg.use_ldam, num_classes=scfg.num_classes,
+        seeds=[seed + i for i in range(scfg.n_clients)],
+        init_keys=list(keys), ledger=ledger)
+    return clients, shards
+
+
+__all__ = ["ClientList", "client_specs", "group_specs",
+           "train_clients_grouped", "build_grouped_federation"]

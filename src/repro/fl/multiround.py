@@ -5,11 +5,14 @@ Round r: clients warm-start from the round-(r-1) global model, train E
 epochs locally, upload; the server runs DENSE (student warm-started from
 the previous global) and broadcasts.
 
-Because every round's federation is homogeneous, the server loop is the
-best case for the grouped-vmap ensemble (core/ensemble.stack_grouped):
-train_dense_server evaluates all m clients as ONE vmapped forward per
-step, and scfg.loop_mode="fused" additionally keeps each round's E
-server epochs device-resident (core/dense.py).
+Because every round's federation is homogeneous, BOTH phases hit their
+grouped fast paths: the local phase trains all m clients as one
+vmapped+scanned program per round (fl/federation.train_clients_grouped,
+selected by ``scfg.client_loop_mode``), and the server loop evaluates all
+m clients as one vmapped forward per step (core/ensemble.stack_grouped —
+fed the stacked client params directly, no unstack/restack).
+``scfg.loop_mode="fused"`` additionally keeps each round's E server
+epochs device-resident (core/dense.py).
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ from repro.core.dense import train_dense_server
 from repro.core.ensemble import Client
 from repro.data.partition import dirichlet_partition
 from repro.fl.client import local_update
+from repro.fl.federation import train_clients_grouped
 from repro.fl.protocol import CommLedger, param_bytes
 from repro.models.cnn import CNNSpec, cnn_init
 
@@ -26,8 +30,14 @@ from repro.models.cnn import CNNSpec, cnn_init
 def dense_multi_round(key, scfg, data, *, rounds: int,
                       ledger: CommLedger | None = None, eval_fn=None,
                       seed: int = 0):
+    mode = getattr(scfg, "client_loop_mode", "grouped")
+    if mode not in ("python", "grouped"):
+        raise ValueError(f"unknown client_loop_mode {mode!r} "
+                         "(expected 'python' or 'grouped')")
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
+    shards = [(x[idx], y[idx]) for idx in parts] if mode == "grouped" \
+        else None
     spec = CNNSpec(kind=scfg.global_kind, num_classes=scfg.num_classes,
                    in_ch=scfg.in_ch, width=scfg.width,
                    image_size=scfg.image_size)
@@ -35,19 +45,33 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
     global_p = None
     accs = []
     for r in range(rounds):
-        clients = []
-        for i, idx in enumerate(parts):
-            p0 = global_p if global_p is not None else cnn_init(keys[i], spec)
-            p, info = local_update(
-                p0, spec, x[idx], y[idx], epochs=scfg.local_epochs,
+        round_seeds = [seed * 1000 + r * 100 + i
+                       for i in range(scfg.n_clients)]
+        if mode == "grouped":
+            clients = train_clients_grouped(
+                [spec] * scfg.n_clients, shards, epochs=scfg.local_epochs,
                 lr=scfg.local_lr, momentum=scfg.local_momentum,
-                batch_size=scfg.batch_size, num_classes=scfg.num_classes,
-                seed=seed * 1000 + r * 100 + i)
-            if ledger is not None:
-                ledger.record("up", f"client{i}", param_bytes(p),
-                              f"round{r}-model-upload")
-            clients.append(Client(spec=spec, params=p, n_data=len(idx),
-                                  class_counts=info["class_counts"]))
+                batch_size=scfg.batch_size, use_ldam=False,
+                num_classes=scfg.num_classes, seeds=round_seeds,
+                init_keys=list(keys[:scfg.n_clients]),
+                init_params=None if global_p is None
+                else [global_p] * scfg.n_clients,
+                ledger=ledger, upload_tag=f"round{r}-model-upload")
+        else:
+            clients = []
+            for i, idx in enumerate(parts):
+                p0 = global_p if global_p is not None \
+                    else cnn_init(keys[i], spec)
+                p, info = local_update(
+                    p0, spec, x[idx], y[idx], epochs=scfg.local_epochs,
+                    lr=scfg.local_lr, momentum=scfg.local_momentum,
+                    batch_size=scfg.batch_size,
+                    num_classes=scfg.num_classes, seed=round_seeds[i])
+                if ledger is not None:
+                    ledger.record("up", f"client{i}", param_bytes(p),
+                                  f"round{r}-model-upload")
+                clients.append(Client(spec=spec, params=p, n_data=len(idx),
+                                      class_counts=info["class_counts"]))
         global_p, _, _ = train_dense_server(
             keys[scfg.n_clients + r], clients, scfg, spec,
             student_params=global_p)

@@ -52,7 +52,28 @@ def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
     and 'upload' the models: the one communication round of DENSE.
 
     Returns (clients, shards) where shards[i] = (x_i, y_i).
+
+    ``scfg.client_loop_mode`` selects the LocalUpdate driver (mirroring
+    ``scfg.loop_mode`` for the server loop):
+
+      * ``"grouped"`` (default) — the fl/federation.py engine: clients
+        are grouped by architecture and each group trains as ONE
+        vmapped+scanned program; the returned ``ClientList`` carries the
+        stacked params straight into ``core.ensemble.stack_grouped``.
+      * ``"python"`` — the per-client reference loop (one jitted step per
+        minibatch), kept as ground truth for the equivalence tests.
+
+    Both consume identical per-client init keys and minibatch seeds and
+    agree to float tolerance (tests/test_federation.py).
     """
+    mode = getattr(scfg, "client_loop_mode", "grouped")
+    if mode == "grouped":
+        from repro.fl.federation import build_grouped_federation
+        return build_grouped_federation(key, scfg, data, ledger=ledger,
+                                        seed=seed)
+    if mode != "python":
+        raise ValueError(f"unknown client_loop_mode {mode!r} "
+                         "(expected 'python' or 'grouped')")
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     clients, shards = [], []

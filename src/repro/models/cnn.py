@@ -43,14 +43,19 @@ def _cbr_init(key, c_in, c_out, ksize=3):
             "bn": L.batchnorm_init(c_out)}
 
 
-def _cbr(p, x, stats, train, stride=1, relu=True):
+def _cbr(p, x, stats, train, stride=1, relu=True, sample_mask=None):
     pre = L.conv2d(p["conv"], x, stride=stride)
-    axes = tuple(range(pre.ndim - 1))
-    stats.append({"mean": jnp.mean(pre.astype(jnp.float32), axes),
-                  "var": jnp.var(pre.astype(jnp.float32), axes),
+    if sample_mask is None:
+        axes = tuple(range(pre.ndim - 1))
+        mu = jnp.mean(pre.astype(jnp.float32), axes)
+        var = jnp.var(pre.astype(jnp.float32), axes)
+    else:
+        mu, var = L.masked_batch_moments(pre, sample_mask)
+    stats.append({"mean": mu, "var": var,
                   "running_mean": p["bn"]["mean"],
                   "running_var": p["bn"]["var"]})
-    y, upd = L.batchnorm(p["bn"], pre, train=train)
+    y, upd = L.batchnorm(p["bn"], pre, train=train,
+                         sample_mask=sample_mask if train else None)
     new_p = {"conv": p["conv"], "bn": {**p["bn"], **upd}}
     return (jax.nn.relu(y) if relu else y), new_p
 
@@ -69,14 +74,14 @@ def _cnn_stack_init(key, spec: CNNSpec, chans):
     return {"layers": layers, "fc": fc}
 
 
-def _cnn_stack_apply(p, spec, x, train):
+def _cnn_stack_apply(p, spec, x, train, sample_mask=None):
     stats, new_layers = [], []
     for lp in p["layers"]:
-        x, np_ = _cbr(lp, x, stats, train)
+        x, np_ = _cbr(lp, x, stats, train, sample_mask=sample_mask)
         new_layers.append(np_)
         if x.shape[1] > 1:           # stop pooling at 1x1 (tiny test images)
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            x = _maxpool2(x)         # strided maximums: ~4x less bandwidth
+                                     # than reduce_window on XLA CPU
     x = x.reshape(x.shape[0], -1)
     logits = L.linear(p["fc"], x)
     return logits, {"layers": new_layers, "fc": p["fc"]}, stats
@@ -278,6 +283,70 @@ def is_conv_stack(kind: str) -> bool:
     return kind in _CNN_LAYOUT
 
 
+def _masked_moments_grouped(pre32: jnp.ndarray, sample_mask):
+    """Per-client per-channel (mean, var) of (m, B, H, W, C) activations;
+    sample_mask (m, B) restricts to valid rows (None = all valid)."""
+    if sample_mask is None:
+        return jnp.mean(pre32, (1, 2, 3)), jnp.var(pre32, (1, 2, 3))
+    w = sample_mask.astype(jnp.float32)[:, :, None, None, None]
+    cnt = jnp.maximum(jnp.sum(w, (1, 2, 3, 4))
+                      * (pre32.shape[2] * pre32.shape[3]), 1.0)[:, None]
+    mu = jnp.sum(pre32 * w, (1, 2, 3)) / cnt
+    var = jnp.sum(jnp.square(pre32 - mu[:, None, None, None, :]) * w,
+                  (1, 2, 3)) / cnt
+    return mu, var
+
+
+def cnn_stack_train_grouped(stacked: dict, spec: CNNSpec, x: jnp.ndarray,
+                            sample_mask: jnp.ndarray | None = None,
+                            momentum: float = 0.9, eps: float = 1e-5):
+    """TRAIN-mode forward of m same-spec conv-stack clients as one fused
+    network — the local-update analogue of ``cnn_stack_apply_grouped``.
+
+    x: (m, B, H, W, C) per-client batches (unlike eval, nothing is
+    shared); sample_mask: (m, B) validity of padded rows. Every conv is
+    the im2col batched GEMM (``_conv3_im2col``), deliberately for train:
+    the einsum's BACKWARD is again einsums (GEMMs), where both a vmapped
+    and a client-concatenated conv formulation lower their kernel
+    gradients to XLA CPU's pathological grouped-convolution path (the
+    c benchmark table measures the gap). BN batch statistics are masked
+    per client and running stats updated exactly as
+    ``layers.batchnorm(train=True)`` does, so per-client results match
+    ``cnn_apply(..., train=True, sample_mask=...)`` to float tolerance.
+
+    Returns (logits (m, B, K), new_stacked, bn_stats) with stats leaves
+    carrying the leading client dim — the same contract as vmapping
+    ``cnn_apply``.
+    """
+    assert spec.kind in _CNN_LAYOUT, spec.kind
+    m = x.shape[0]
+    h, stats, new_layers = x, [], []
+    for lp in stacked["layers"]:
+        pre32 = _conv3_im2col(h, lp["conv"]["w"], m).astype(jnp.float32)
+        mu, var = _masked_moments_grouped(pre32, sample_mask)
+        bn = lp["bn"]
+        stats.append({"mean": mu, "var": var,
+                      "running_mean": bn["mean"], "running_var": bn["var"]})
+        bn_b = {"mean": mu[:, None, None, None, :],
+                "var": var[:, None, None, None, :],
+                "scale": bn["scale"][:, None, None, None, :],
+                "bias": bn["bias"][:, None, None, None, :]}
+        y = (pre32 - bn_b["mean"]) * jax.lax.rsqrt(bn_b["var"] + eps)
+        y = y.astype(x.dtype) * bn_b["scale"].astype(x.dtype) \
+            + bn_b["bias"].astype(x.dtype)
+        h = jax.nn.relu(y)
+        new_layers.append({"conv": lp["conv"], "bn": {
+            **bn, "mean": momentum * bn["mean"] + (1 - momentum) * mu,
+            "var": momentum * bn["var"] + (1 - momentum) * var}})
+        if h.shape[2] > 1:           # stop pooling at 1x1 (tiny test images)
+            h = _maxpool2(h)
+    feat = h.reshape(m, h.shape[1], -1)
+    logits = jnp.einsum("mbf,mfk->mbk", feat,
+                        stacked["fc"]["w"].astype(feat.dtype)) \
+        + stacked["fc"]["b"][:, None, :].astype(feat.dtype)
+    return logits, {"layers": new_layers, "fc": stacked["fc"]}, stats
+
+
 # --------------------------------------------------------------- ResNet ----
 
 def _basic_init(key, c_in, c_out, stride):
@@ -289,12 +358,15 @@ def _basic_init(key, c_in, c_out, stride):
     return p
 
 
-def _basic_apply(p, x, stats, train, stride):
-    y, n1 = _cbr(p["c1"], x, stats, train, stride=stride)
-    y, n2 = _cbr(p["c2"], y, stats, train, relu=False)
+def _basic_apply(p, x, stats, train, stride, sample_mask=None):
+    y, n1 = _cbr(p["c1"], x, stats, train, stride=stride,
+                 sample_mask=sample_mask)
+    y, n2 = _cbr(p["c2"], y, stats, train, relu=False,
+                 sample_mask=sample_mask)
     new = {"c1": n1, "c2": n2}
     if "proj" in p:
-        sc, np_ = _cbr(p["proj"], x, stats, train, stride=stride, relu=False)
+        sc, np_ = _cbr(p["proj"], x, stats, train, stride=stride, relu=False,
+                       sample_mask=sample_mask)
         new["proj"] = np_
     else:
         sc = x
@@ -321,15 +393,16 @@ def _resnet_init(key, spec: CNNSpec, blocks_per_stage, widths):
     return p
 
 
-def _resnet_apply(p, spec, x, train, blocks_per_stage):
+def _resnet_apply(p, spec, x, train, blocks_per_stage, sample_mask=None):
     stats = []
-    x, new_stem = _cbr(p["stem"], x, stats, train)
+    x, new_stem = _cbr(p["stem"], x, stats, train, sample_mask=sample_mask)
     new_stages = []
     for s, blocks in enumerate(p["stages"]):
         new_blocks = []
         for b, bp in enumerate(blocks):
             stride = 2 if (b == 0 and s > 0) else 1
-            x, nb = _basic_apply(bp, x, stats, train, stride)
+            x, nb = _basic_apply(bp, x, stats, train, stride,
+                                 sample_mask=sample_mask)
             new_blocks.append(nb)
         new_stages.append(new_blocks)
     x = jnp.mean(x, axis=(1, 2))
@@ -360,12 +433,21 @@ def cnn_init(key, spec: CNNSpec) -> dict:
     raise ValueError(f"unknown CNN kind {spec.kind!r}")
 
 
-def cnn_apply(params: dict, spec: CNNSpec, x: jnp.ndarray, *, train: bool):
-    """x: (B, H, W, C) in [-1, 1]. Returns (logits, new_params, bn_stats)."""
+def cnn_apply(params: dict, spec: CNNSpec, x: jnp.ndarray, *, train: bool,
+              sample_mask: jnp.ndarray | None = None):
+    """x: (B, H, W, C) in [-1, 1]. Returns (logits, new_params, bn_stats).
+
+    sample_mask (optional, (B,) bool): marks valid rows of a padded
+    batch. Train-mode BN statistics (normalization, running-stat updates,
+    and the reported bn_stats) are computed over valid rows only, so a
+    padded ragged minibatch reproduces its unpadded reference exactly
+    (fl/client.local_update_grouped); padded rows still produce logits —
+    mask them out of the loss."""
     if spec.kind in _RESNET_LAYOUT:
         bps, _ = _RESNET_LAYOUT[spec.kind]
-        return _resnet_apply(params, spec, x, train, bps)
-    return _cnn_stack_apply(params, spec, x, train)
+        return _resnet_apply(params, spec, x, train, bps,
+                             sample_mask=sample_mask)
+    return _cnn_stack_apply(params, spec, x, train, sample_mask=sample_mask)
 
 
 def cnn_logits(params: dict, spec: CNNSpec, x: jnp.ndarray) -> jnp.ndarray:

@@ -155,14 +155,37 @@ def batchnorm_init(c: int, dtype=jnp.float32) -> Params:
             "var": jnp.ones((c,), jnp.float32)}
 
 
+def masked_batch_moments(x: jnp.ndarray, sample_mask: jnp.ndarray):
+    """Per-channel (mean, var) of x over all non-channel axes, counting
+    only rows where sample_mask (shape (B,), bool) is True. With an
+    all-True mask this equals jnp.mean/var over the same axes; with a
+    partial mask it equals the moments of the valid sub-batch — what a
+    padded ragged minibatch needs to match its unpadded reference."""
+    axes = tuple(range(x.ndim - 1))
+    xf = x.astype(jnp.float32)
+    w = sample_mask.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (x.ndim - 1))
+    count = jnp.maximum(jnp.sum(w) * math.prod(x.shape[1:-1]), 1.0)
+    mu = jnp.sum(xf * w, axes) / count
+    var = jnp.sum(jnp.square(xf - mu) * w, axes) / count
+    return mu, var
+
+
 def batchnorm(p: Params, x: jnp.ndarray, *, train: bool,
-              momentum: float = 0.9, eps: float = 1e-5):
+              momentum: float = 0.9, eps: float = 1e-5,
+              sample_mask: jnp.ndarray | None = None):
     """Returns (y, new_stats). In train mode uses batch stats and returns
-    updated running stats; in eval mode uses running stats."""
+    updated running stats; in eval mode uses running stats. sample_mask
+    (train mode only, shape (B,)) restricts the batch statistics to valid
+    rows so padded samples neither shift the normalization nor leak into
+    the running stats (the grouped ragged-shard path)."""
     if train:
-        axes = tuple(range(x.ndim - 1))
-        mu = jnp.mean(x.astype(jnp.float32), axes)
-        var = jnp.var(x.astype(jnp.float32), axes)
+        if sample_mask is None:
+            axes = tuple(range(x.ndim - 1))
+            mu = jnp.mean(x.astype(jnp.float32), axes)
+            var = jnp.var(x.astype(jnp.float32), axes)
+        else:
+            mu, var = masked_batch_moments(x, sample_mask)
         new = {"mean": momentum * p["mean"] + (1 - momentum) * mu,
                "var": momentum * p["var"] + (1 - momentum) * var}
     else:

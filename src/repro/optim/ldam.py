@@ -14,9 +14,17 @@ def class_margins(class_counts: jnp.ndarray, max_margin: float = 0.5):
 
 
 def ldam_loss(logits: jnp.ndarray, labels: jnp.ndarray,
-              margins: jnp.ndarray, s: float = 30.0) -> jnp.ndarray:
-    """Margin-adjusted CE: subtract m_y from the true-class logit, scale by s."""
+              margins: jnp.ndarray, s: float = 30.0,
+              sample_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Margin-adjusted CE: subtract m_y from the true-class logit, scale by s.
+
+    sample_mask ((B,) bool, optional): mean over valid rows only — the
+    grouped ragged-batch path. None is the plain batch mean."""
     onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
     adj = logits - onehot * margins[None, :].astype(logits.dtype)
     logp = jax.nn.log_softmax(s * adj, axis=-1)
-    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    nll = -jnp.sum(onehot * logp, axis=-1)
+    if sample_mask is None:
+        return jnp.mean(nll)
+    w = sample_mask.astype(nll.dtype)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -11,3 +11,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.devices()
+
+
+def pytest_configure(config):
+    # scripts/tier1.sh --fast runs `-m "not slow"`: mark multi-config
+    # equivalence sweeps (grouped-vs-python local training & co) slow so
+    # the fast gate stays within a tight time budget.
+    config.addinivalue_line(
+        "markers", "slow: long equivalence sweep; excluded by "
+                   "scripts/tier1.sh --fast")

@@ -1,0 +1,235 @@
+"""Grouped client-training engine equivalence + invariants.
+
+The grouped local-update path (fl/federation.py, fl/client.py
+local_update_grouped) is a pure perf refactor of the per-client python
+reference loop: same seeds => same final params to float tolerance, for
+LDAM margins, heterogeneous multi-group federations, and ragged shards
+whose sizes don't divide batch_size. The one-shot communication profile
+(m uploads, zero broadcasts) must survive grouped uploads.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cifar import DenseExperimentConfig
+from repro.core.ensemble import Client, stack_grouped
+from repro.data import make_classification_data
+from repro.data.pipeline import batches, build_batch_plan, pad_shards
+from repro.fl import (CommLedger, build_federation, dense_multi_round,
+                      fedavg, fedavg_stacked, param_bytes)
+from repro.fl.client import local_update, local_update_grouped
+from repro.models import layers as L
+from repro.models.cnn import CNNSpec, cnn_apply, cnn_init
+
+SCFG = DenseExperimentConfig(
+    n_clients=3, alpha=0.5, local_epochs=2, batch_size=16, num_classes=4,
+    image_size=8, in_ch=1, train_per_class=37, test_per_class=8,
+    client_kinds=("cnn1",) * 3, global_kind="cnn1", width=0.25, nz=16,
+    t_g=1, epochs=1, synth_batch=16)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _data(seed=0, scfg=SCFG):
+    return make_classification_data(
+        seed, num_classes=scfg.num_classes, size=scfg.image_size,
+        ch=scfg.in_ch, train_per_class=scfg.train_per_class,
+        test_per_class=scfg.test_per_class)
+
+
+# ------------------------------------------------------------ batch plan ---
+
+def test_batch_plan_matches_reference_iterator():
+    """Valid slots of the plan == the exact batches() index stream."""
+    sizes, batch, epochs, seeds = [37, 16, 20], 8, 3, [5, 6, 7]
+    plan = build_batch_plan(sizes, batch, epochs=epochs, seeds=seeds)
+    assert plan.steps == epochs * plan.steps_per_epoch
+    for k, (n, seed) in enumerate(zip(sizes, seeds)):
+        x = np.arange(n)[:, None]
+        want = [bx[:, 0] for bx, _ in
+                batches(x, np.zeros(n, np.int64), batch, seed=seed,
+                        epochs=epochs)]
+        got = [plan.idx[k, s][plan.mask[k, s]] for s in range(plan.steps)
+               if plan.mask[k, s].any()]
+        assert len(want) == len(got)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(w, g)
+    # padding never gathers out of range
+    for k, n in enumerate(sizes):
+        assert plan.idx[k].max() < n
+
+
+def test_pad_shards_keeps_real_rows_first():
+    shards = [(np.ones((3, 2, 2, 1)), np.array([1, 2, 3])),
+              (np.full((5, 2, 2, 1), 2.0), np.array([4, 5, 6, 7, 8]))]
+    xs, ys = pad_shards(shards)
+    assert xs.shape == (2, 5, 2, 2, 1) and ys.shape == (2, 5)
+    np.testing.assert_array_equal(ys[0], [1, 2, 3, 0, 0])
+    np.testing.assert_array_equal(ys[1], [4, 5, 6, 7, 8])
+
+
+# ------------------------------------------------------------- masked BN ---
+
+def test_masked_batchnorm_matches_subbatch():
+    """Masked train-mode BN over a padded batch == plain BN over the
+    valid sub-batch (normalized rows AND running-stat updates)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, 4, 4, 3)).astype(np.float32))
+    mask = jnp.asarray([True, True, True, True, False, False])
+    p = L.batchnorm_init(3)
+    y_m, upd_m = L.batchnorm(p, x, train=True, sample_mask=mask)
+    y_r, upd_r = L.batchnorm(p, x[:4], train=True)
+    np.testing.assert_allclose(np.asarray(y_m[:4]), np.asarray(y_r),
+                               atol=1e-5)
+    for k in ("mean", "var"):
+        np.testing.assert_allclose(np.asarray(upd_m[k]),
+                                   np.asarray(upd_r[k]), atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["cnn1", "wrn16_1"])
+def test_masked_cnn_apply_matches_subbatch(kind):
+    """cnn_apply(sample_mask) == cnn_apply on the unpadded sub-batch:
+    valid logits and BN running-stat updates agree (conv-stack AND
+    residual kinds)."""
+    spec = CNNSpec(kind=kind, num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    params = cnn_init(jax.random.PRNGKey(0), spec)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((5, 8, 8, 1)).astype(np.float32))
+    mask = jnp.asarray([True, True, True, False, False])
+    lg_m, new_m, _ = cnn_apply(params, spec, x, train=True,
+                               sample_mask=mask)
+    lg_r, new_r, _ = cnn_apply(params, spec, x[:3], train=True)
+    np.testing.assert_allclose(np.asarray(lg_m[:3]), np.asarray(lg_r),
+                               atol=1e-4)
+    assert _max_diff(new_m, new_r) < 1e-5
+
+
+# ----------------------------------------- grouped local update ≡ python ---
+
+@pytest.mark.parametrize("use_ldam", [False, True])
+def test_grouped_local_update_matches_python(use_ldam):
+    """Same seeds -> same final params, ragged shards (37, 21 with
+    batch 16), LDAM margins stacked along the client axis."""
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    rng = np.random.default_rng(2)
+    shards = []
+    for n in (37, 21):
+        x = rng.standard_normal((n, 8, 8, 1)).astype(np.float32)
+        y = rng.integers(0, 4, n)
+        shards.append((x, y))
+    inits = [cnn_init(jax.random.PRNGKey(i), spec) for i in range(2)]
+    seeds = [11, 12]
+
+    ref = [local_update(p0, spec, x, y, epochs=2, batch_size=16,
+                        use_ldam=use_ldam, num_classes=4, seed=s)[0]
+           for p0, (x, y), s in zip(inits, shards, seeds)]
+
+    xs, ys = pad_shards(shards)
+    plan = build_batch_plan([37, 21], 16, epochs=2, seeds=seeds)
+    stacked0 = jax.tree.map(lambda *a: jnp.stack(a), *inits)
+    counts = np.stack([np.bincount(y, minlength=4) for _, y in shards])
+    trained, info = local_update_grouped(
+        stacked0, spec, xs, ys, plan, use_ldam=use_ldam, num_classes=4,
+        class_counts=counts)
+    assert info["loss"].shape == (plan.steps, 2)
+    for k in range(2):
+        got = jax.tree.map(lambda a, _k=k: a[_k], trained)
+        assert _max_diff(got, ref[k]) < 1e-4
+
+
+@pytest.mark.slow
+def test_build_federation_grouped_matches_python_heterogeneous():
+    """Full protocol equivalence on a 2-group federation (cnn1 x2 +
+    cnn2) with Dirichlet-ragged shards; ledger records m uploads with
+    per-client byte counts and zero broadcasts under both drivers."""
+    scfg = dataclasses.replace(SCFG, client_kinds=("cnn1", "cnn2", "cnn1"))
+    data = _data(0, scfg)
+    out = {}
+    for mode in ("python", "grouped"):
+        led = CommLedger()
+        clients, shards = build_federation(
+            jax.random.PRNGKey(0),
+            dataclasses.replace(scfg, client_loop_mode=mode), data,
+            ledger=led)
+        out[mode] = (clients, shards, led)
+    cp, sp_, lp = out["python"]
+    cg, sg, lg = out["grouped"]
+    for a, b in zip(cp, cg):
+        assert a.spec == b.spec and a.n_data == b.n_data
+        np.testing.assert_array_equal(a.class_counts, b.class_counts)
+        assert _max_diff(a.params, b.params) < 1e-4
+    for (xa, ya), (xb, yb) in zip(sp_, sg):
+        np.testing.assert_array_equal(ya, yb)
+    # one-shot property under grouped uploads
+    assert lg.rounds == 1 and lg.downlink_bytes == 0
+    assert len([e for e in lg.events if e["dir"] == "up"]) == 3
+    assert lg.uplink_bytes == lp.uplink_bytes \
+        == sum(param_bytes(c.params) for c in cg)
+    # engine's stacked params ARE the ensemble representation (no restack)
+    gspecs, gparams = stack_grouped(cg)
+    assert gspecs == cg.grouped[0]
+    assert all(ga is gb for ga, gb in zip(gparams, cg.grouped[1]))
+    assert [(s.kind, n) for s, n in gspecs] == [("cnn1", 2), ("cnn2", 1)]
+
+
+@pytest.mark.slow
+def test_multiround_grouped_matches_python():
+    """Round-r warm starts and per-round seeds survive the grouped
+    rewrite: identical global model after 2 rounds."""
+    scfg = dataclasses.replace(SCFG, n_clients=2,
+                               client_kinds=("cnn1", "cnn1"))
+    data = _data(5, scfg)
+    out = {}
+    for mode in ("python", "grouped"):
+        gp, spec, _ = dense_multi_round(
+            jax.random.PRNGKey(6),
+            dataclasses.replace(scfg, client_loop_mode=mode), data,
+            rounds=2)
+        out[mode] = gp
+    assert _max_diff(out["python"], out["grouped"]) < 5e-3
+
+
+def test_unknown_client_loop_mode_raises():
+    scfg = dataclasses.replace(SCFG, client_loop_mode="nope")
+    data = _data(0)
+    with pytest.raises(ValueError):
+        build_federation(jax.random.PRNGKey(0), scfg, data)
+    with pytest.raises(ValueError):
+        dense_multi_round(jax.random.PRNGKey(0), scfg, data, rounds=1)
+
+
+# ---------------------------------------------------------------- fedavg ---
+
+def _tiny_clients(n=2, n_data=(10, 20)):
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    return [Client(spec=spec, params=cnn_init(jax.random.PRNGKey(i), spec),
+                   n_data=nd) for i, nd in zip(range(n), n_data)]
+
+
+def test_fedavg_rejects_nonpositive_n_data():
+    with pytest.raises(ValueError):
+        fedavg(_tiny_clients(2, (10, 0)))
+    with pytest.raises(ValueError):
+        fedavg(_tiny_clients(2, (-3, 5)))
+    stacked = jax.tree.map(lambda *a: jnp.stack(a),
+                           *[c.params for c in _tiny_clients()])
+    with pytest.raises(ValueError):
+        fedavg_stacked(stacked, [0, 7])
+
+
+def test_fedavg_stacked_matches_listwise():
+    clients = _tiny_clients()
+    stacked = jax.tree.map(lambda *a: jnp.stack(a),
+                           *[c.params for c in clients])
+    got = fedavg_stacked(stacked, [c.n_data for c in clients])
+    want = fedavg(clients)
+    assert _max_diff(got, want) < 1e-6
