@@ -137,6 +137,66 @@ def ensemble_acc(scfg, seed=0):
     return float((np.concatenate(pred) == yt).mean())
 
 
+RECORDS: list[dict] = []
+
+
 def emit(name: str, seconds: float, derived: str):
-    """CSV contract: name,us_per_call,derived."""
+    """CSV contract: name,us_per_call,derived. Every record is also
+    collected in RECORDS so run.py --json can write the machine-readable
+    trajectory file (BENCH_PR3.json)."""
+    RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
+
+
+def _series_key(name: str) -> str:
+    """Trajectory-diffable series id: the record name minus a trailing
+    size parameter (/m8, /alpha0.5, /rounds2 ...), so each series pools
+    only directly comparable variants — looped vs grouped vs sharded
+    stay separate instead of being mixed into one meaningless median."""
+    import re
+    head, _, tail = name.rpartition("/")
+    return head if head and re.fullmatch(
+        r"(m|alpha|rounds|hetero)[0-9.]+", tail) else name
+
+
+def write_json(path: str) -> None:
+    """Dump collected records + per-table AND per-series medians as one
+    JSON document. Tables are the leading name component (k/e/c/s/...);
+    medians are over nonzero us_per_call records (zero-cost rows are
+    accuracy/speedup annotations, not timings). The per-series medians
+    are the regression-trackable stats: a table median pools variants
+    that are not comparable (e.g. c pools looped and grouped rows, so a
+    grouped-engine regression could hide in it)."""
+    import json
+    import platform
+
+    by_table: dict[str, list[float]] = {}
+    by_series: dict[str, list[float]] = {}
+    for r in RECORDS:
+        by_table.setdefault(r["name"].split("/", 1)[0], []).append(
+            r["us_per_call"])
+        by_series.setdefault(_series_key(r["name"]), []).append(
+            r["us_per_call"])
+
+    def med(groups):
+        out = {}
+        for key, us in sorted(groups.items()):
+            timed = [u for u in us if u > 0]
+            out[key] = {"records": len(us),
+                        "median_us": float(np.median(timed))
+                        if timed else 0.0}
+        return out
+
+    payload = {"schema": "dense-bench-v1",
+               "jax": jax.__version__,
+               "backend": jax.default_backend(),
+               "device_count": jax.device_count(),
+               "python": platform.python_version(),
+               "tables": med(by_table),
+               "series": med(by_series),
+               "records": RECORDS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}: {len(RECORDS)} records, "
+          f"tables={sorted(by_table)}", flush=True)

@@ -13,7 +13,12 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
   E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
   C   client local training looped vs grouped engine         [§Perf]
+  S   client-axis mesh sharding vs single-device grouped     [§Perf]
   R   roofline summary from dry-run artifacts                [§Roofline]
+
+``--json PATH`` additionally writes every emitted record plus per-table
+medians as one machine-readable document (the BENCH_PR3.json perf
+trajectory artifact; scripts/tier1.sh writes it, CI uploads it).
 """
 from __future__ import annotations
 
@@ -303,6 +308,10 @@ def c_client_training(full: bool):
                           for spec, idx in groups]
 
             def looped_pass():
+                # block on EVERY client's final loss: with async dispatch,
+                # syncing only the last client would stop the clock while
+                # earlier clients' chains are still in flight
+                done = []
                 for spec, idx in groups:
                     step, opt = make_local_step(spec, lr=0.01, momentum=0.9,
                                                 use_ldam=False)
@@ -312,9 +321,11 @@ def c_client_training(full: bool):
                                               epochs=epochs):
                             p, st, loss = step(p, st, jnp.asarray(bx),
                                                jnp.asarray(by), zeros_marg)
-                jax.block_until_ready(loss)
+                        done.append(loss)
+                jax.block_until_ready(done)
 
             def grouped_pass():
+                done = []
                 for spec, idx, xs, ys in group_data:
                     run, opt = make_grouped_local_update(
                         spec, lr=0.01, momentum=0.9, use_ldam=False)
@@ -328,7 +339,8 @@ def c_client_training(full: bool):
                                        jnp.asarray(plan.idx),
                                        jnp.asarray(plan.mask),
                                        jnp.zeros((len(idx), 6)))
-                jax.block_until_ready(losses)
+                    done.append(losses)
+                jax.block_until_ready(done)
 
             t_loop, t_grp = time_ab(looped_pass, (), grouped_pass, (),
                                     warmup=2, iters=7 if not full else 15)
@@ -339,6 +351,84 @@ def c_client_training(full: bool):
                      f"clients_per_sec={m / t:.2f};steps={total_steps}")
             emit(f"c/local_train/speedup/{variant}/m{m}", 0.0,
                  f"grouped_over_looped={t_loop / t_grp:.2f}x")
+
+
+def s_sharding(full: bool):
+    """S: the client-axis mesh (fl/sharding). (a) grouped ensemble
+    forward, single-device vs sharded-over-("clients","data"); (b) the
+    grouped local-update scan, unplaced vs client-sharded placement.
+    On a 1-device host the mesh is degenerate (clients axis = 1) and the
+    table measures pure shard_map/placement overhead; run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (or an accelerator
+    backend) for real-axis numbers — derived reports the axis size so
+    the trajectory records which regime was measured."""
+    from repro.core.ensemble import (Client, grouped_ensemble_logits,
+                                     stack_grouped)
+    from repro.data.pipeline import build_batch_plan, pad_shards
+    from repro.fl.client import make_grouped_local_update
+    from repro.fl.sharding import (client_axis_size, group_shardable,
+                                   put_grouped, put_stacked)
+    from repro.launch.mesh import make_client_mesh
+    from repro.models.cnn import CNNSpec, cnn_init
+
+    mesh = make_client_mesh()
+    c = client_axis_size(mesh)
+    spec = CNNSpec(kind="cnn1", num_classes=10, in_ch=3, width=0.5,
+                   image_size=16)
+    b = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, 16, 16, 3))
+    for m in (8, 16):
+        clients = [Client(spec=spec,
+                          params=cnn_init(jax.random.PRNGKey(i), spec))
+                   for i in range(m)]
+        gspecs, gparams = stack_grouped(clients)
+        sharded = group_shardable(mesh, m)
+        gp_sh = put_grouped(gspecs, gparams, mesh)
+        f_one = jax.jit(lambda gp, xb: grouped_ensemble_logits(gspecs, gp,
+                                                               xb))
+        f_sh = jax.jit(lambda gp, xb: grouped_ensemble_logits(
+            gspecs, gp, xb, mesh=mesh))
+        t_one, t_sh = time_ab(f_one, (gparams, x), f_sh, (gp_sh, x))
+        emit(f"s/ensemble_forward/single/m{m}", t_one, f"batch={b}")
+        emit(f"s/ensemble_forward/sharded/m{m}", t_sh,
+             (f"batch={b};clients_axis={c};sharded={sharded};"
+              f"speedup={t_one / t_sh:.2f}x"))
+
+    n_per, batch, epochs = 40, 16, 2
+    rng = np.random.default_rng(0)
+    tspec = CNNSpec(kind="cnn1", num_classes=6, in_ch=3, width=0.25,
+                    image_size=8)
+    for m in (8, 16):
+        shards = [(rng.standard_normal((n_per, 8, 8, 3)).astype(np.float32),
+                   rng.integers(0, 6, n_per)) for _ in range(m)]
+        inits = [cnn_init(jax.random.PRNGKey(i), tspec) for i in range(m)]
+        xs, ys = pad_shards(shards)
+        plan = build_batch_plan([n_per] * m, batch, epochs=epochs,
+                                seeds=list(range(m)))
+        run, opt = make_grouped_local_update(tspec, lr=0.01, momentum=0.9,
+                                             use_ldam=False)
+        margins = jnp.zeros((m, 6))
+        args0 = (jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(plan.idx),
+                 jnp.asarray(plan.mask), margins)
+        sharded = group_shardable(mesh, m)
+        args_sh = put_stacked(args0, mesh, m) if sharded else args0
+
+        def one_pass(args):
+            stacked0 = jax.tree.map(lambda *a: jnp.stack(a), *inits)
+            state = opt.init(stacked0)
+            if args is args_sh and sharded:
+                stacked0, state = put_stacked((stacked0, state), mesh, m)
+            p, s, losses = run(stacked0, state, *args)
+            jax.block_until_ready(losses)
+
+        t_one, t_sh = time_ab(one_pass, (args0,), one_pass, (args_sh,),
+                              warmup=2, iters=7 if not full else 15)
+        steps = m * epochs * (-(-n_per // batch))
+        emit(f"s/local_train/single/m{m}", t_one / steps,
+             f"clients_per_sec={m / t_one:.2f}")
+        emit(f"s/local_train/sharded/m{m}", t_sh / steps,
+             (f"clients_per_sec={m / t_sh:.2f};clients_axis={c};"
+              f"sharded={sharded};speedup={t_one / t_sh:.2f}x"))
 
 
 def r_roofline(full: bool):
@@ -367,20 +457,26 @@ def r_roofline(full: bool):
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
           "f3": f3_local_vs_global, "k": k_kernels, "e": e_ensemble,
-          "c": c_client_training, "r": r_roofline}
+          "c": c_client_training, "s": s_sharding, "r": r_roofline}
 
 
 def main() -> None:
+    from benchmarks.common import write_json
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="EXPERIMENTS.md budget (slow)")
     ap.add_argument("--only", default=None,
                     help="comma list of tables, e.g. t1,t6,k")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write records + per-table medians as JSON "
+                         "(the BENCH_PR3.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)
     for n in names:
         TABLES[n](args.full)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

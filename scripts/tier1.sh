@@ -3,13 +3,21 @@
 #   ./scripts/tier1.sh [--fast] [extra pytest args]
 #
 # Default: the ROADMAP tier-1 test command, then the kernel (k),
-# ensemble/epoch-driver (e) and grouped-client-training (c) benchmark
-# tables so the perf trajectory is captured alongside every
-# verification run.
+# ensemble/epoch-driver (e), grouped-client-training (c) and client-axis
+# sharding (s) benchmark tables — printed as CSV and written as the
+# machine-readable BENCH_PR3.json trajectory artifact
+# (benchmarks/run.py --json; CI uploads it).
 #
 # --fast: tight-time-budget gate — skips tests marked `slow` (the long
 # grouped-vs-python equivalence sweeps, see tests/conftest.py) and the
-# benchmark tables.
+# benchmark tables. NOTE: because the tables are skipped, --fast does
+# NOT emit BENCH_PR3.json; CI's bench job calls benchmarks/run.py --json
+# directly instead.
+#
+# Exit code: nonzero iff any step fails. `set -e` aborts on the first
+# failing command with its code, and the explicit final `exit` makes the
+# propagation unconditional even for CI shells without pipefail/errexit
+# heritage in the invoking environment.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,4 +29,6 @@ if [[ "${1:-}" == "--fast" ]]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --only k,e,c
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/run.py --only k,e,c,s --json BENCH_PR3.json
+exit 0

@@ -55,6 +55,14 @@ class DenseExperimentConfig:
                                     # architecture group — fl/federation)
                                     # or "python" (per-client reference
                                     # loop; equivalence ground truth).
+    ensemble_shard_mode: str = "none"  # stacked-client-axis placement:
+                                    # "none" (single-device default) or
+                                    # "clients" (shard the leading client
+                                    # dim of every stacked computation —
+                                    # local training AND the ensemble
+                                    # teacher — over the ("clients",
+                                    # "data") mesh; fl/sharding.py,
+                                    # DESIGN.md §8).
     seed: int = 0
 
 

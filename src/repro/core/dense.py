@@ -72,7 +72,8 @@ class DenseHistory:
 
 
 def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
-                     scfg, *, use_bn: bool = True, use_div: bool = True):
+                     scfg, *, use_bn: bool = True, use_div: bool = True,
+                     mesh=None):
     """Build jitted steps closed over the frozen (grouped) ensemble.
 
     Returns (gen_step, student_step, g_opt, s_opt, gparams, epoch_step,
@@ -81,12 +82,24 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     argument; epochs_step scans epoch_step over a chunk of per-epoch keys
     with donated carries (the loop_mode="fused" driver).
 
+    mesh defaults to ``fl.sharding.resolve_mesh(scfg)``
+    (scfg.ensemble_shard_mode): with a ("clients", "data") mesh the
+    stacked client params are placed client-sharded and the teacher's
+    logit mean lowers to one psum over the ``clients`` axis
+    (ensemble._group_sum_sharded).
+
     use_bn / use_div=False reproduce the paper's ablations (Table 6).
     """
+    if mesh is None:
+        from repro.fl.sharding import resolve_mesh
+        mesh = resolve_mesh(scfg)
     g_opt = optim.adam(scfg.g_lr)
     s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
     img = scfg.image_size
     gspecs, gparams = stack_grouped(clients)
+    if mesh is not None:
+        from repro.fl.sharding import put_grouped
+        gparams = put_grouped(gspecs, gparams, mesh)
 
     def gen_forward(gen_p, z):
         return G.img_generator(gen_p, z, img_size=img)
@@ -96,7 +109,8 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
         def loss_fn(gp):
             x = gen_forward(gp, z)
             avg, stats = grouped_ensemble_logits(gspecs, gparams, x,
-                                                 with_bn_stats=True)
+                                                 with_bn_stats=True,
+                                                 mesh=mesh)
             stu = cnn_logits(stu_p, student_spec, x)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats) if use_bn else jnp.zeros(())
@@ -111,7 +125,7 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     @jax.jit
     def student_step(stu_p, s_state, gen_p, gparams, z):
         x = jax.lax.stop_gradient(gen_forward(gen_p, z))
-        avg = grouped_ensemble_logits(gspecs, gparams, x)
+        avg = grouped_ensemble_logits(gspecs, gparams, x, mesh=mesh)
 
         def loss_fn(sp):
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
@@ -204,6 +218,9 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
     scfg.loop_mode selects the epoch driver ("python" per-step jit —
     the CPU default — or "fused" device-resident chunks of
     scfg.loop_chunk epochs; see module docstring).
+    scfg.ensemble_shard_mode="clients" additionally shards the frozen
+    client stack over a ("clients", "data") mesh (fl/sharding.py) — a
+    pure placement/lowering choice, same math (DESIGN.md §8).
     """
     student_spec = student_spec or CNNSpec(
         kind=scfg.global_kind, num_classes=scfg.num_classes,

@@ -139,6 +139,18 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
 
 # ------------------------------------------------ pod-sharded (dry-runable)
 
+def pod_stack_specs(param_specs_tree, mesh):
+    """Ensemble-dim sharding for the stacked client params — the pod-mesh
+    instance of the shared stacked-client-axis vocabulary
+    (``fl.sharding.stack_specs``; the host CNN path spells the same axis
+    "clients"). The leading client dim shards over ``pod`` when the mesh
+    has one (multi-pod) and stays replicated on a single pod, prepended
+    to the per-client Megatron specs (launch/shardings.param_specs)."""
+    from repro.fl.sharding import stack_specs
+    axis = "pod" if "pod" in mesh.axis_names else None
+    return stack_specs(param_specs_tree, axis)
+
+
 def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
                           s_lr: float = 1e-4, chunked_kl: bool = False,
                           kl_chunk: int = 64):

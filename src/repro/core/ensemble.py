@@ -21,9 +21,14 @@ Grouping reorders clients by first occurrence of their spec; both the
 logit average and L_BN are order-invariant sums over clients, so the two
 paths agree to float tolerance (tests/test_fastpath.py).
 
-On the production mesh the same average is realized as a psum over the
-ensemble mesh axis — see repro/core/dense_llm.py (and launch/mesh.py for
-the axis layout).
+With a ("clients", "data") mesh (``grouped_ensemble_logits(..., mesh=)``,
+routed by ``scfg.ensemble_shard_mode`` — see fl/sharding.py) each stacked
+group's leading client dim is sharded over the ``clients`` axis and the
+group sum lowers to per-shard partial sums + one ``psum`` via
+``shard_map`` — the host realization of the pod-axis all-reduce in
+repro/core/dense_llm.py (DESIGN.md §8). Groups whose size the axis does
+not divide keep the single-device vmap path, so the mesh is always
+correctness-safe.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_apply_grouped,
                               is_conv_stack)
@@ -116,15 +122,64 @@ def stack_grouped(clients: Sequence[Client]):
     return tuple(gspecs), gparams
 
 
+def _group_stack_forward(params, spec, x, size, with_stats):
+    """(logits (size, B, K) f32, stacked stats) for one stacked group —
+    fused grouped-channel forward for conv-stack kinds, vmap fallback."""
+    if is_conv_stack(spec.kind):
+        # fully-fused grouped-channel forward (models/cnn.py)
+        lgs, stacked_stats = cnn_stack_apply_grouped(
+            params, spec, x, size, with_stats=with_stats)
+        return lgs.astype(jnp.float32), stacked_stats
+
+    def one(p, _spec=spec):
+        lg_k, _, st_k = cnn_apply(p, _spec, x, train=False)
+        return lg_k.astype(jnp.float32), st_k
+
+    return jax.vmap(one)(params)
+
+
+def _group_sum_sharded(params, spec, x, size, mesh, with_stats):
+    """Sharded group sum: the leading client dim splits over the mesh's
+    ``clients`` axis, each shard runs the same fused/vmapped forward on
+    its size // axis clients, and the sum lowers to ONE ``psum``.
+
+    Returns (group_sum (B, K) f32 replicated, stacked stats with the full
+    (size, ...) leading dim sharded over ``clients``). Callers guarantee
+    divisibility (fl.sharding.group_shardable).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.fl.sharding import CLIENT_AXIS, client_axis_size
+
+    loc = size // client_axis_size(mesh)
+
+    def local(p_shard, xb):
+        lgs, st = _group_stack_forward(p_shard, spec, xb, loc, with_stats)
+        s = jax.lax.psum(jnp.sum(lgs, axis=0), CLIENT_AXIS)
+        return (s, st) if with_stats else s
+
+    out_specs = (P(), P(CLIENT_AXIS)) if with_stats else P()
+    out = shard_map(local, mesh=mesh, in_specs=(P(CLIENT_AXIS), P()),
+                    out_specs=out_specs, check_rep=False)(params, x)
+    return out if with_stats else (out, [])
+
+
 def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
-                            with_bn_stats: bool = False):
+                            with_bn_stats: bool = False, mesh=None):
     """Eq. (1) over the grouped representation — one vmapped forward per
     architecture group instead of one unrolled forward per client.
 
     Matches ``ensemble_logits`` up to float tolerance; with_bn_stats
     returns a flat per-client stats list (group order) compatible with
     ``losses.bn_loss``, which is order-invariant.
+
+    mesh: optional ("clients", "data") mesh (fl/sharding.py). Stacked
+    groups whose size the ``clients`` axis divides evaluate as one
+    shard_map whose group sum is a single psum over that axis; other
+    groups (and singletons) keep the single-device path.
     """
+    if mesh is not None:
+        from repro.fl.sharding import group_shardable
     m = sum(size for _, size in gspecs)
     logits_sum = None
     all_stats = []
@@ -135,18 +190,13 @@ def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
             if with_bn_stats:
                 all_stats.append(stats)
         else:
-            if is_conv_stack(spec.kind):
-                # fully-fused grouped-channel forward (models/cnn.py)
-                lgs, stacked_stats = cnn_stack_apply_grouped(
-                    params, spec, x, size, with_stats=with_bn_stats)
-                lgs = lgs.astype(jnp.float32)
+            if mesh is not None and group_shardable(mesh, size):
+                group_sum, stacked_stats = _group_sum_sharded(
+                    params, spec, x, size, mesh, with_bn_stats)
             else:
-                def one(p, _spec=spec):
-                    lg_k, _, st_k = cnn_apply(p, _spec, x, train=False)
-                    return lg_k.astype(jnp.float32), st_k
-
-                lgs, stacked_stats = jax.vmap(one)(params)
-            group_sum = jnp.sum(lgs, axis=0)
+                lgs, stacked_stats = _group_stack_forward(
+                    params, spec, x, size, with_bn_stats)
+                group_sum = jnp.sum(lgs, axis=0)
             if with_bn_stats:
                 for k in range(size):
                     all_stats.append(jax.tree.map(lambda a, _k=k: a[_k],

@@ -184,13 +184,22 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
                          plan: BatchPlan, *, lr: float = 0.01,
                          momentum: float = 0.9, use_ldam: bool = False,
                          num_classes: int = 10,
-                         class_counts: np.ndarray | None = None):
+                         class_counts: np.ndarray | None = None,
+                         mesh=None):
     """Train m same-spec clients as one compiled program.
 
     stacked_params: client params stacked on a leading axis (DONATED —
     invalidated by the call). xs/ys: padded shards. plan: the shared
     BatchPlan. class_counts (m, num_classes): real per-shard label counts
     (required for LDAM margins; also returned in info).
+
+    mesh: optional ("clients", "data") mesh (fl/sharding.py). When the
+    ``clients`` axis divides m, every leading-client-axis tensor — param
+    and momentum carries, padded shards, the BatchPlan, margins — is
+    placed client-sharded before the scan, so the whole local phase runs
+    SPMD: the step math is per-client, so GSPMD partitions it with no
+    cross-shard communication and the scan carries stay sharded across
+    all steps. Placement only; the compiled math is unchanged.
 
     Returns (stacked_params, info) mirroring ``local_update``'s contract,
     with info["loss"] of shape (steps, m) as a device array.
@@ -212,10 +221,17 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
     run, opt = make_grouped_local_update(spec, lr=lr, momentum=momentum,
                                          use_ldam=use_ldam,
                                          has_padding_steps=has_padding)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    idx, mask = jnp.asarray(plan.idx), jnp.asarray(plan.mask)
     state = opt.init(stacked_params)
-    stacked_params, _, losses = run(stacked_params, state, jnp.asarray(xs),
-                                    jnp.asarray(ys), jnp.asarray(plan.idx),
-                                    jnp.asarray(plan.mask), margins)
+    if mesh is not None:
+        from repro.fl.sharding import group_shardable, put_stacked
+        if group_shardable(mesh, m):
+            (stacked_params, state, xs, ys, idx, mask, margins) = \
+                put_stacked((stacked_params, state, xs, ys, idx, mask,
+                             margins), mesh, m)
+    stacked_params, _, losses = run(stacked_params, state, xs, ys, idx,
+                                    mask, margins)
     return stacked_params, {"loss": losses, "class_counts": class_counts}
 
 

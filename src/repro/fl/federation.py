@@ -15,7 +15,11 @@ view) and trains each group as ONE compiled program:
   * the trained stacked params become the grouped-ensemble representation
     *directly*: ``ClientList.grouped`` hands (gspecs, gparams) to
     ``core.ensemble.stack_grouped`` with no unstack/restack through host
-    memory, and ``fl.fedavg.fedavg`` reduces the same stacked axis.
+    memory, and ``fl.fedavg.fedavg`` reduces the same stacked axis;
+  * with ``scfg.ensemble_shard_mode="clients"`` (fl/sharding.py) each
+    group's stacked carries and batch-plan tensors are placed with the
+    client axis sharded over the ("clients", "data") mesh, so the whole
+    local phase is SPMD — placement only, identical math.
 
 Per-client ``Client`` views (materialized once per client by slicing the
 stacked arrays — grouped consumers never touch them, but per-client
@@ -78,8 +82,8 @@ def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
                           init_params: Sequence[dict] | None = None,
                           n_data: Sequence[int] | None = None,
                           ledger=None,
-                          upload_tag: str = "round0-model-upload"
-                          ) -> ClientList:
+                          upload_tag: str = "round0-model-upload",
+                          mesh=None) -> ClientList:
     """Run the grouped LocalUpdate phase over an arbitrary federation.
 
     specs/shards/seeds are per-client (federation order). Initial params
@@ -88,7 +92,9 @@ def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
     python reference uses, so both paths start identically. Records one
     'up' ledger event per client with that client's byte count (the
     one-shot property — m uploads, zero broadcasts — is preserved under
-    grouped training).
+    grouped training). mesh: optional ("clients", "data") mesh; each
+    group whose size the ``clients`` axis divides trains client-sharded
+    (fl.client.local_update_grouped).
     """
     from repro.fl.protocol import param_bytes   # lazy: protocol routes here
     m = len(specs)
@@ -113,7 +119,8 @@ def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
                            for _, y in group_shards])
         trained, _ = local_update_grouped(
             stacked0, spec, xs, ys, plan, lr=lr, momentum=momentum,
-            use_ldam=use_ldam, num_classes=num_classes, class_counts=counts)
+            use_ldam=use_ldam, num_classes=num_classes, class_counts=counts,
+            mesh=mesh)
         size = len(idx)
         if size == 1:
             trained = jax.tree.map(lambda a: a[0], trained)
@@ -144,7 +151,10 @@ def build_grouped_federation(key, scfg, data, *, ledger=None, seed: int = 0):
     ``grouped`` representation feeds ``stack_grouped`` directly. Uses the
     same per-client init keys and batch seeds as the python reference, so
     the two paths agree to float tolerance.
+    ``scfg.ensemble_shard_mode="clients"`` trains each (divisible) group
+    sharded over the ("clients", "data") mesh — same seeds, same math.
     """
+    from repro.fl.sharding import resolve_mesh
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     shards = [(x[idx], y[idx]) for idx in parts]
@@ -155,7 +165,7 @@ def build_grouped_federation(key, scfg, data, *, ledger=None, seed: int = 0):
         momentum=scfg.local_momentum, batch_size=scfg.batch_size,
         use_ldam=scfg.use_ldam, num_classes=scfg.num_classes,
         seeds=[seed + i for i in range(scfg.n_clients)],
-        init_keys=list(keys), ledger=ledger)
+        init_keys=list(keys), ledger=ledger, mesh=resolve_mesh(scfg))
     return clients, shards
 
 

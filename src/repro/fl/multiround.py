@@ -30,10 +30,12 @@ from repro.models.cnn import CNNSpec, cnn_init
 def dense_multi_round(key, scfg, data, *, rounds: int,
                       ledger: CommLedger | None = None, eval_fn=None,
                       seed: int = 0):
+    from repro.fl.sharding import resolve_mesh
     mode = getattr(scfg, "client_loop_mode", "grouped")
     if mode not in ("python", "grouped"):
         raise ValueError(f"unknown client_loop_mode {mode!r} "
                          "(expected 'python' or 'grouped')")
+    mesh = resolve_mesh(scfg)
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     shards = [(x[idx], y[idx]) for idx in parts] if mode == "grouped" \
@@ -56,7 +58,8 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
                 init_keys=list(keys[:scfg.n_clients]),
                 init_params=None if global_p is None
                 else [global_p] * scfg.n_clients,
-                ledger=ledger, upload_tag=f"round{r}-model-upload")
+                ledger=ledger, upload_tag=f"round{r}-model-upload",
+                mesh=mesh)
         else:
             clients = []
             for i, idx in enumerate(parts):

@@ -1,0 +1,121 @@
+"""Client-axis mesh sharding: one SPMD vocabulary for every stacked-client
+computation, from grouped local training to the ensemble teacher.
+
+The grouped engine (fl/federation.py) and the grouped ensemble
+(core/ensemble.stack_grouped) both hold a federation as per-architecture
+pytrees stacked along a leading client dim of size m. This module is the
+single place that maps that dim onto a mesh:
+
+  * ``launch.mesh.make_client_mesh`` builds the ("clients", "data") mesh;
+    ``resolve_mesh(scfg)`` routes it from ``scfg.ensemble_shard_mode``
+    ("none" -> single-device, "clients" -> shard the client axis).
+  * ``client_stack_sharding`` / ``put_stacked`` place an (m, ...) stack
+    with the leading dim split over ``clients`` — used for param and
+    momentum carries AND for the (m, steps, batch) batch-plan tensors, so
+    grouped local training is SPMD by placement alone (GSPMD propagates
+    the client axis through the vmapped step; per-client math never
+    crosses shards).
+  * ``stack_specs`` prepends a stacked-client axis to an existing
+    PartitionSpec tree — the shared vocabulary between this host path and
+    ``core.dense_llm``'s pod-sharded cell, whose ensemble dim is the same
+    leading client dim under the name "pod".
+  * ``core.ensemble.grouped_ensemble_logits(..., mesh=...)`` lowers the
+    logit mean to per-shard partial sums + ONE ``psum`` over ``clients``
+    via ``shard_map`` (DESIGN.md §8).
+
+A group only shards when its size is divisible by the ``clients`` axis
+(``group_shardable``); otherwise it is placed replicated and the existing
+single-device vmap path runs unchanged — ``ensemble_shard_mode="clients"``
+is therefore always correctness-safe, on any device count. Equivalence is
+exercised on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(tests/test_client_sharding.py, CI job ``sharding-equivalence``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_client_mesh
+
+CLIENT_AXIS = "clients"
+
+SHARD_MODES = ("none", "clients")
+
+
+def resolve_mesh(scfg):
+    """Mesh routing for the CNN-scale host path: None (single-device,
+    the default) or the ("clients", "data") host mesh."""
+    mode = getattr(scfg, "ensemble_shard_mode", "none")
+    if mode == "none":
+        return None
+    if mode == "clients":
+        return make_client_mesh()
+    raise ValueError(f"unknown ensemble_shard_mode {mode!r} "
+                     f"(expected one of {SHARD_MODES})")
+
+
+def client_axis_size(mesh) -> int:
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(CLIENT_AXIS, 1))
+
+
+def group_shardable(mesh, size: int) -> bool:
+    """A stacked group shards iff the clients axis divides its size (each
+    shard then carries size // axis whole clients)."""
+    return mesh is not None and size > 1 \
+        and size % client_axis_size(mesh) == 0
+
+
+def stack_specs(inner_specs, axis):
+    """Prepend a stacked-client axis to an existing PartitionSpec tree.
+
+    The shared spec vocabulary between the host and pod paths: the host
+    CNN stacks use axis="clients" over replicated inner specs; the LLM
+    pod cell (core.dense_llm.pod_stack_specs) prepends axis="pod" to its
+    Megatron param specs. axis=None yields a replicated leading dim.
+    """
+    return jax.tree.map(lambda s: P(axis, *s), inner_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def client_stack_sharding(mesh) -> NamedSharding:
+    """Leading client dim over ``clients``; everything else replicated."""
+    return NamedSharding(mesh, P(CLIENT_AXIS))
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def put_stacked(tree, mesh, size: int):
+    """Place a leading-client-axis stacked pytree on the mesh: sharded
+    over ``clients`` when the group size divides, else replicated."""
+    if mesh is None:
+        return tree
+    sh = client_stack_sharding(mesh) if group_shardable(mesh, size) \
+        else replicated_sharding(mesh)
+    return jax.device_put(tree, sh)
+
+
+def put_replicated(tree, mesh):
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, replicated_sharding(mesh))
+
+
+def put_grouped(gspecs, gparams, mesh):
+    """Place a grouped-ensemble representation (ensemble.stack_grouped):
+    each stacked group client-sharded when divisible, singletons and
+    ragged groups replicated."""
+    if mesh is None:
+        return gparams
+    return [put_replicated(params, mesh) if size == 1
+            else put_stacked(params, mesh, size)
+            for (_, size), params in zip(gspecs, gparams)]
+
+
+__all__ = ["CLIENT_AXIS", "SHARD_MODES", "resolve_mesh", "client_axis_size",
+           "group_shardable", "stack_specs", "client_stack_sharding",
+           "replicated_sharding", "put_stacked", "put_replicated",
+           "put_grouped"]

@@ -283,10 +283,8 @@ def run_dense_distill_cell(*, multi_pod: bool = False,
         aparams = SP.abstract_params(cfg)
         pspecs = SH.param_specs(cfg, aparams, mesh)
         # client stack: ensemble dim over 'pod' (multi-pod) else replicated
-        ens_axis = "pod" if multi_pod else None
-        cspecs = jax.tree_util.tree_map(
-            lambda s: P(ens_axis, *s), pspecs,
-            is_leaf=lambda x: isinstance(x, P))
+        # — the shared stacked-client-axis vocabulary (fl/sharding.py)
+        cspecs = DL.pod_stack_specs(pspecs, mesh)
         sspecs = {"params": pspecs,
                   "opt": {"m": SH.zero1_specs(pspecs, aparams, mesh),
                           "v": SH.zero1_specs(pspecs, aparams, mesh),

@@ -12,11 +12,7 @@ import jax  # noqa: E402
 
 jax.devices()
 
-
-def pytest_configure(config):
-    # scripts/tier1.sh --fast runs `-m "not slow"`: mark multi-config
-    # equivalence sweeps (grouped-vs-python local training & co) slow so
-    # the fast gate stays within a tight time budget.
-    config.addinivalue_line(
-        "markers", "slow: long equivalence sweep; excluded by "
-                   "scripts/tier1.sh --fast")
+# The `slow` marker (scripts/tier1.sh --fast runs `-m "not slow"`) is
+# registered in pyproject.toml [tool.pytest.ini_options], paired with
+# --strict-markers — not here, so a typo there fails loudly instead of
+# being masked by a duplicate registration.
