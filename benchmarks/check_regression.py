@@ -1,0 +1,137 @@
+"""Bench-trajectory regression gate.
+
+Compares a fresh ``benchmarks/run.py --json`` document against the
+committed baseline (the previous PR's trajectory artifact, e.g.
+BENCH_PR3.json) on **per-series medians** — the only stats in the file
+that pool directly-comparable records (see common.write_json) — and
+exits nonzero when any previously-measured series slowed down by more
+than ``--threshold`` (default 1.5x).
+
+Noise tolerance, deliberately asymmetric (only *slowdowns* can fail):
+
+  * series whose baseline median is below ``--min-us`` are reported but
+    never fail — sub-50µs timings on a shared CI host are dispatch
+    jitter, and a 1.5x ratio of jitter is meaningless;
+  * series present on only one side are reported but never fail —
+    tables get added (this PR adds ``kl``) and renamed; the gate only
+    guards series both documents measured;
+  * when the two documents record different measurement environments
+    (python version / backend / device count — e.g. a dev-box baseline
+    vs the CI runner), absolute medians are not comparable across them:
+    the gate downgrades to REPORT-ONLY (prints every ratio, exits 0).
+    The ARMED instance in CI therefore compares against a baseline the
+    runner itself produced — .github/workflows/ci.yml caches the fresh
+    JSON of every main push (actions/cache) and gates PRs against that
+    same-environment copy; the committed BENCH_PR*.json comparison runs
+    alongside as the cross-PR trajectory record;
+  * ``SKIP_BENCH_GATE=1`` (or the ``skip-bench-gate`` PR label, wired as
+    a step condition in .github/workflows/ci.yml) skips the gate for
+    known-noisy or intentionally-slower changes.
+
+Usage:
+  python benchmarks/check_regression.py BASELINE.json FRESH.json \
+      [--threshold 1.5] [--min-us 50]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def series_medians(doc: dict) -> dict[str, float]:
+    return {name: rec["median_us"]
+            for name, rec in doc.get("series", {}).items()}
+
+
+def env_key(doc: dict) -> tuple:
+    """The fields that must match for absolute medians to be comparable.
+
+    Python is compared at major.minor only: a runner-image patch bump
+    (3.11.9 -> 3.11.10) does not change machine speed, and keying on it
+    would silently disarm the CI gate until the next baseline refresh."""
+    py = str(doc.get("python") or "")
+    return (".".join(py.split(".")[:2]), doc.get("backend"),
+            doc.get("device_count"))
+
+
+def compare(base: dict[str, float], fresh: dict[str, float], *,
+            threshold: float, min_us: float):
+    """-> (rows, offenders): every shared series with its ratio, and the
+    subset that fails the gate."""
+    rows, offenders = [], []
+    for name in sorted(set(base) | set(fresh)):
+        b, f = base.get(name), fresh.get(name)
+        if b is None or f is None:
+            rows.append((name, b, f, None, "only-" +
+                         ("fresh" if b is None else "baseline")))
+            continue
+        if b <= min_us or f <= 0.0:
+            rows.append((name, b, f, None, "sub-noise-floor"))
+            continue
+        ratio = f / b
+        verdict = "REGRESSION" if ratio > threshold else "ok"
+        rows.append((name, b, f, ratio, verdict))
+        if ratio > threshold:
+            offenders.append((name, b, f, ratio))
+    return rows, offenders
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold per-series bench slowdowns")
+    ap.add_argument("baseline", help="committed trajectory JSON "
+                                     "(previous PR's artifact)")
+    ap.add_argument("fresh", help="freshly generated trajectory JSON")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed fresh/baseline median ratio")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="baseline medians below this are jitter, "
+                         "never gated")
+    args = ap.parse_args(argv)
+
+    if os.environ.get("SKIP_BENCH_GATE") == "1":
+        print("check_regression: SKIP_BENCH_GATE=1 — gate skipped")
+        return 0
+
+    with open(args.baseline) as fh:
+        base_doc = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh_doc = json.load(fh)
+    rows, offenders = compare(series_medians(base_doc),
+                              series_medians(fresh_doc),
+                              threshold=args.threshold, min_us=args.min_us)
+
+    print(f"# baseline={args.baseline} ({base_doc.get('backend')}, "
+          f"jax {base_doc.get('jax')}) vs fresh={args.fresh} "
+          f"({fresh_doc.get('backend')}, jax {fresh_doc.get('jax')})")
+    print("series,baseline_us,fresh_us,ratio,verdict")
+    for name, b, f, ratio, verdict in rows:
+        print(f"{name},{'' if b is None else round(b, 1)},"
+              f"{'' if f is None else round(f, 1)},"
+              f"{'' if ratio is None else round(ratio, 3)},{verdict}")
+
+    if offenders:
+        if env_key(base_doc) != env_key(fresh_doc):
+            print(f"\ncheck_regression: REPORT-ONLY — {len(offenders)} "
+                  f"series exceed {args.threshold}x but the baseline was "
+                  f"measured on a different environment "
+                  f"({env_key(base_doc)} vs {env_key(fresh_doc)}); commit "
+                  f"a baseline from this environment to arm the gate")
+            return 0
+        print(f"\ncheck_regression: FAILED — {len(offenders)} series "
+              f"slower than {args.threshold}x:", file=sys.stderr)
+        for name, b, f, ratio in offenders:
+            print(f"  {name}: {b:.1f}us -> {f:.1f}us ({ratio:.2f}x)",
+                  file=sys.stderr)
+        print("(re-run locally with scripts/tier1.sh, or apply the "
+              "`skip-bench-gate` label / SKIP_BENCH_GATE=1 for known-noisy "
+              "changes)", file=sys.stderr)
+        return 1
+    print("\ncheck_regression: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -143,7 +143,7 @@ RECORDS: list[dict] = []
 def emit(name: str, seconds: float, derived: str):
     """CSV contract: name,us_per_call,derived. Every record is also
     collected in RECORDS so run.py --json can write the machine-readable
-    trajectory file (BENCH_PR3.json)."""
+    trajectory file (BENCH_PR4.json)."""
     RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
                     "derived": derived})
     print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
@@ -167,7 +167,9 @@ def write_json(path: str) -> None:
     accuracy/speedup annotations, not timings). The per-series medians
     are the regression-trackable stats: a table median pools variants
     that are not comparable (e.g. c pools looped and grouped rows, so a
-    grouped-engine regression could hide in it)."""
+    grouped-engine regression could hide in it).
+    benchmarks/check_regression.py consumes exactly these series medians
+    to gate CI on cross-PR slowdowns."""
     import json
     import platform
 

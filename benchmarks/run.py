@@ -11,14 +11,16 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   T6  generator-loss ablation (CE / BN / div)                [Table 6]
   F3  one-shot FedAvg vs DENSE vs local models               [Figure 3]
   K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
+  KL  distill-KL fwd / fwd+bwd, ref vs fused custom-VJP      [§Perf]
   E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
   C   client local training looped vs grouped engine         [§Perf]
   S   client-axis mesh sharding vs single-device grouped     [§Perf]
   R   roofline summary from dry-run artifacts                [§Roofline]
 
 ``--json PATH`` additionally writes every emitted record plus per-table
-medians as one machine-readable document (the BENCH_PR3.json perf
-trajectory artifact; scripts/tier1.sh writes it, CI uploads it).
+medians as one machine-readable document (the BENCH_PR4.json perf
+trajectory artifact; scripts/tier1.sh writes it, CI uploads it and
+benchmarks/check_regression.py gates PRs on the per-series medians).
 """
 from __future__ import annotations
 
@@ -166,6 +168,58 @@ def k_kernels(full: bool):
     y2, _ = ref.ssd(x, dt_in, a, b, c)
     err = float(jnp.max(jnp.abs(y - y2)))
     emit("k/ssd_scan/256x4x32", dt, f"max_err={err:.2e};interpret=cpu")
+
+
+def kl_distill(full: bool):
+    """KL: the stage-2 distillation loss, forward and forward+backward,
+    ref (materialized jnp autodiff) vs the fused custom-VJP Pallas pair
+    (kernels/distill_kl, DESIGN.md §9). On this CPU host the kernels run
+    in interpret mode, so the µs columns measure the interpreter, not the
+    Mosaic lowering — the trackable claims are the grad-equivalence error
+    and the analytic peak-HBM residual bytes, which are backend-free."""
+    from repro.kernels import ops, ref
+    R, V = 64, 4096
+    br, bv = 32, 1024
+    t = jax.random.normal(jax.random.PRNGKey(0), (R, V)) * 3
+    s = jax.random.normal(jax.random.PRNGKey(1), (R, V)) * 3
+    g = jnp.ones((R,), jnp.float32) / R
+    iters = 5 if full else 3
+
+    f_ref = jax.jit(ref.distill_kl)
+    f_fus = jax.jit(lambda a, b: ops.distill_kl(a, b, br, bv))
+
+    def fwdbwd(fwd):
+        def run(a, b):
+            out, pull = jax.vjp(fwd, a, b)
+            return out, pull(g)
+        return jax.jit(run)
+
+    fb_ref = fwdbwd(ref.distill_kl)
+    fb_fus = fwdbwd(lambda a, b: ops.distill_kl(a, b, br, bv))
+
+    err_f = float(jnp.max(jnp.abs(f_fus(t, s) - f_ref(t, s))))
+    (_, (dt_r, ds_r)), (_, (dt_k, ds_k)) = fb_ref(t, s), fb_fus(t, s)
+    err_b = max(float(jnp.max(jnp.abs(dt_k - dt_r))),
+                float(jnp.max(jnp.abs(ds_k - ds_r))))
+
+    shape = f"{R}x{V}"
+    for name, fn in (("fwd/ref", f_ref), ("fwd/fused", f_fus),
+                     ("fwdbwd/ref", fb_ref), ("fwdbwd/fused", fb_fus)):
+        dt = time_call(fn, t, s, warmup=1, iters=iters)
+        err = err_f if name.startswith("fwd/") else err_b
+        emit(f"kl/{name}/{shape}", dt, f"max_err={err:.2e};interpret=cpu")
+
+    # analytic residual bytes saved fwd->bwd (what HBM must hold between
+    # the passes): ref keeps two (R, V) f32 log-softmaxes; fused folds
+    # its five online accumulators into three f32 rows — lse_t, lse_s,
+    # kl (distill_kl._vjp_fwd; inputs are alive in both cases)
+    def residuals(r, v):
+        return 2 * 4 * r * v, 3 * 4 * r
+    rb, fb = residuals(R, V)
+    rb_p, fb_p = residuals(4096, 262144)
+    emit(f"kl/residual_bytes/{shape}", 0.0,
+         (f"ref={rb};fused={fb};ratio={rb / fb:.0f}x;"
+          f"paper_scale_4096x262144:ref={rb_p};fused={fb_p}"))
 
 
 def e_ensemble(full: bool):
@@ -456,8 +510,9 @@ def r_roofline(full: bool):
 
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
-          "f3": f3_local_vs_global, "k": k_kernels, "e": e_ensemble,
-          "c": c_client_training, "s": s_sharding, "r": r_roofline}
+          "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
+          "e": e_ensemble, "c": c_client_training, "s": s_sharding,
+          "r": r_roofline}
 
 
 def main() -> None:
@@ -469,7 +524,7 @@ def main() -> None:
                     help="comma list of tables, e.g. t1,t6,k")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records + per-table medians as JSON "
-                         "(the BENCH_PR3.json trajectory artifact)")
+                         "(the BENCH_PR4.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)

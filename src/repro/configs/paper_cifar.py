@@ -63,6 +63,14 @@ class DenseExperimentConfig:
                                     # teacher — over the ("clients",
                                     # "data") mesh; fl/sharding.py,
                                     # DESIGN.md §8).
+    distill_kl_mode: str = "ref"    # stage-2 KL implementation: "ref"
+                                    # (materialized jnp log-softmax +
+                                    # autodiff — CPU default) or "fused"
+                                    # (Pallas custom-VJP kernel pair
+                                    # streaming vocab blocks in both
+                                    # passes; kernels/distill_kl,
+                                    # DESIGN.md §9. interpret-mode on
+                                    # CPU hosts, Mosaic on TPU).
     seed: int = 0
 
 

@@ -93,6 +93,12 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     if mesh is None:
         from repro.fl.sharding import resolve_mesh
         mesh = resolve_mesh(scfg)
+    # stage-2 KL implementation: "ref" (jnp autodiff, CPU default) or
+    # "fused" (Pallas custom-VJP kernel pair — kernels/distill_kl,
+    # DESIGN.md §9); both the student's L_dis and the generator's L_div
+    # route through it, so the fused dL/dt stream is reused in stage 1
+    kl_mode = getattr(scfg, "distill_kl_mode", "ref")
+    LS.check_mode(kl_mode)
     g_opt = optim.adam(scfg.g_lr)
     s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
     img = scfg.image_size
@@ -114,7 +120,8 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
             stu = cnn_logits(stu_p, student_spec, x)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats) if use_bn else jnp.zeros(())
-            l_div = LS.div_loss(avg, stu) if use_div else jnp.zeros(())
+            l_div = LS.div_loss(avg, stu, mode=kl_mode) if use_div \
+                else jnp.zeros(())
             total = l_ce + scfg.lambda_bn * l_bn + scfg.lambda_div * l_div
             return total, {"ce": l_ce, "bn": l_bn, "div": l_div}
 
@@ -129,7 +136,9 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
 
         def loss_fn(sp):
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
-            return LS.distill_loss(avg, logits), new_sp
+            # avg is stop-gradient'd upstream: skip the fused dL/dt stream
+            return LS.distill_loss(avg, logits, mode=kl_mode,
+                                   with_teacher_grad=False), new_sp
 
         (loss, stats_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(stu_p)
         new_p, new_state = s_opt.update(grads, s_state, stu_p)
@@ -221,6 +230,9 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
     scfg.ensemble_shard_mode="clients" additionally shards the frozen
     client stack over a ("clients", "data") mesh (fl/sharding.py) — a
     pure placement/lowering choice, same math (DESIGN.md §8).
+    scfg.distill_kl_mode selects the stage-2 KL implementation ("ref"
+    jnp autodiff or "fused" Pallas custom-VJP pair, DESIGN.md §9) —
+    also a pure implementation choice, same math.
     """
     student_spec = student_spec or CNNSpec(
         kind=scfg.global_kind, num_classes=scfg.num_classes,

@@ -91,9 +91,15 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
                          gen_seq: int = 64, nz: int = 64,
                          g_lr: float = 1e-3, s_lr: float = 1e-4,
                          lambda_bn: float = 1.0, lambda_div: float = 0.5,
-                         mesh=None, dp_axes=()):
+                         mesh=None, dp_axes=(),
+                         distill_kl_mode: str = "ref"):
     """Jitted (gen_step, student_step) for a heterogeneous LM federation
-    (host/smoke scale; the pod-sharded path is make_pod_distill_step)."""
+    (host/smoke scale; the pod-sharded path is make_pod_distill_step).
+
+    distill_kl_mode: "ref" or "fused" — both L_dis and L_div route
+    through losses.softmax_kl, so "fused" streams the (tokens, V) KL and
+    its gradients through the Pallas kernel pair (DESIGN.md §9)."""
+    LS.check_mode(distill_kl_mode)
     g_opt = optim.adam(g_lr)
     s_opt = optim.adam(s_lr)
     V = student_cfg.vocab_size
@@ -110,7 +116,7 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
             sf = stu.astype(jnp.float32).reshape(-1, V)
             l_ce = LS.ce_loss(af, y.reshape(-1))
             l_bn = embed_stats_loss(client_cfgs, cparams, embeds)
-            l_div = LS.div_loss(af, sf)
+            l_div = LS.div_loss(af, sf, mode=distill_kl_mode)
             return l_ce + lambda_bn * l_bn + lambda_div * l_div, \
                 {"ce": l_ce, "bn": l_bn, "div": l_div}
 
@@ -128,7 +134,9 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
             stu, _, _ = T.forward(sp, student_cfg, embeds=embeds, mesh=mesh,
                                   dp_axes=dp_axes, remat=False)
             return LS.distill_loss(avg.reshape(-1, V),
-                                   stu.astype(jnp.float32).reshape(-1, V))
+                                   stu.astype(jnp.float32).reshape(-1, V),
+                                   mode=distill_kl_mode,
+                                   with_teacher_grad=False)
 
         loss, grads = jax.value_and_grad(loss_fn)(stu_p)
         new_p, new_s = s_opt.update(grads, s_state, stu_p)
@@ -153,7 +161,7 @@ def pod_stack_specs(param_specs_tree, mesh):
 
 def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
                           s_lr: float = 1e-4, chunked_kl: bool = False,
-                          kl_chunk: int = 64):
+                          kl_chunk: int = 64, distill_kl_mode: str = "ref"):
     """The paper-representative production cell: DENSE stage-2 distillation
     with a homogeneous client stack vmapped over a leading ensemble dim.
 
@@ -167,7 +175,13 @@ def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
     teacher/student logit tensors — keep trunk outputs as hidden states and
     fuse readout + KL per sequence chunk (the XLA-level analogue of the
     Pallas distill_kl kernel).
+
+    distill_kl_mode routes the materialized path's KL + backward through
+    the Pallas custom-VJP kernel pair ("fused", DESIGN.md §9) instead of
+    jnp autodiff ("ref"). Orthogonal to chunked_kl, which avoids the
+    logit tensors altogether and keeps its internal ref-mode KL.
     """
+    LS.check_mode(distill_kl_mode)
     s_opt = optim.adam(s_lr)
     dp = tuple(a for a in ("data",) if a in mesh.axis_names)
     V = cfg.vocab_size
@@ -185,8 +199,11 @@ def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
         avg = ens_fwd(stacked_client_params, embeds, hidden=False)
         stu, _, _ = T.forward(sp, cfg, embeds=embeds, mesh=mesh,
                               dp_axes=dp, remat=True)
+        # grads are taken wrt sp only: the teacher cotangent is dead code
         return LS.distill_loss(avg.reshape(-1, V),
-                               stu.astype(jnp.float32).reshape(-1, V))
+                               stu.astype(jnp.float32).reshape(-1, V),
+                               mode=distill_kl_mode,
+                               with_teacher_grad=False)
 
     def loss_chunked(sp, stacked_client_params, embeds):
         th = jax.lax.stop_gradient(

@@ -6,20 +6,53 @@
                                    their argmax predictions disagree
   L_gen (Eq. 5)  = L_CE + λ1 L_BN + λ2 L_div
   L_dis (Eq. 6)  distillation    — KL(D(x̂) ‖ f_S(x̂))
+
+Every KL-based loss takes ``mode``: ``"ref"`` (materialized jnp
+log-softmax, differentiated by autodiff — the CPU-fast default) or
+``"fused"`` (the Pallas custom-VJP kernel pair, kernels/distill_kl —
+streams vocab blocks in BOTH directions, never materializing an (R, V)
+softmax; DESIGN.md §9). Routed per-config by ``scfg.distill_kl_mode``.
+``with_teacher_grad=False`` lets stop-gradient'd-teacher call sites
+(stage 2's student step) skip the fused dL/dt stream.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+KL_MODES = ("ref", "fused")
+
+
+def check_mode(mode: str) -> None:
+    """Fail fast on an unknown distill_kl mode — part of the public
+    contract (dense.py / dense_llm.py validate at step-build time, before
+    anything jits)."""
+    if mode not in KL_MODES:
+        raise ValueError(f"unknown distill_kl mode {mode!r} "
+                         f"(expected one of {KL_MODES})")
+
 
 def softmax_kl(p_logits: jnp.ndarray, q_logits: jnp.ndarray,
-               temperature: float = 1.0) -> jnp.ndarray:
-    """Per-sample KL( softmax(p/T) ‖ softmax(q/T) ), shape (B,)."""
-    pl = p_logits.astype(jnp.float32) / temperature
-    ql = q_logits.astype(jnp.float32) / temperature
-    logp = jax.nn.log_softmax(pl, axis=-1)
-    logq = jax.nn.log_softmax(ql, axis=-1)
+               temperature: float = 1.0, *, mode: str = "ref",
+               block_rows: int = 256, block_v: int = 2048,
+               with_teacher_grad: bool = True) -> jnp.ndarray:
+    """Per-sample KL( softmax(p/T) ‖ softmax(q/T) ), shape (B,).
+
+    Temperature scaling stays OUTSIDE the fused kernel: the 1/T chain
+    rule flows through the scaling op, so both modes share it. Like the
+    ref path, any leading batch shape is accepted (the kernel sees the
+    flattened (rows, V) view)."""
+    check_mode(mode)
+    pt = p_logits.astype(jnp.float32) / temperature
+    qt = q_logits.astype(jnp.float32) / temperature
+    if mode == "fused":
+        from repro.kernels import ops as kops
+        lead, v = pt.shape[:-1], pt.shape[-1]
+        kl = kops.distill_kl(pt.reshape(-1, v), qt.reshape(-1, v),
+                             block_rows, block_v, None, with_teacher_grad)
+        return kl.reshape(lead)
+    logp = jax.nn.log_softmax(pt, axis=-1)
+    logq = jax.nn.log_softmax(qt, axis=-1)
     return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
 
 
@@ -40,29 +73,36 @@ def bn_loss(per_client_stats) -> jnp.ndarray:
 
 
 def div_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
-             temperature: float = 1.0) -> jnp.ndarray:
+             temperature: float = 1.0, *, mode: str = "ref") -> jnp.ndarray:
     """Eq. (4): −ω·KL(D‖f_S); ω = 1[argmax D ≠ argmax f_S].
 
     Returned value is the loss to *minimize* (already negated); gradients
-    flow to the generator through both logit tensors.
+    flow to the generator through both logit tensors — the fused mode
+    keeps the dL/dt (teacher-side) stream on for exactly this reuse.
     """
     omega = (jnp.argmax(avg_logits, -1)
              != jnp.argmax(student_logits, -1)).astype(jnp.float32)
-    kl = softmax_kl(avg_logits, student_logits, temperature)
+    kl = softmax_kl(avg_logits, student_logits, temperature, mode=mode)
     return -jnp.mean(omega * kl)
 
 
 def gen_loss(avg_logits, labels, per_client_stats, student_logits, *,
-             lambda_bn: float, lambda_div: float):
+             lambda_bn: float, lambda_div: float, mode: str = "ref"):
     """Eq. (5). Returns (total, dict of parts)."""
     l_ce = ce_loss(avg_logits, labels)
     l_bn = bn_loss(per_client_stats)
-    l_div = div_loss(avg_logits, student_logits)
+    l_div = div_loss(avg_logits, student_logits, mode=mode)
     total = l_ce + lambda_bn * l_bn + lambda_div * l_div
     return total, {"ce": l_ce, "bn": l_bn, "div": l_div}
 
 
 def distill_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
-                 temperature: float = 1.0) -> jnp.ndarray:
-    """Eq. (6): mean_b KL(D(x̂) ‖ f_S(x̂))."""
-    return jnp.mean(softmax_kl(avg_logits, student_logits, temperature))
+                 temperature: float = 1.0, *, mode: str = "ref",
+                 with_teacher_grad: bool = True) -> jnp.ndarray:
+    """Eq. (6): mean_b KL(D(x̂) ‖ f_S(x̂)).
+
+    Student steps pass ``with_teacher_grad=False`` (the teacher is
+    stop-gradient'd upstream) so the fused backward skips its dL/dt
+    stream; the default stays gradient-complete for any other caller."""
+    return jnp.mean(softmax_kl(avg_logits, student_logits, temperature,
+                               mode=mode, with_teacher_grad=with_teacher_grad))

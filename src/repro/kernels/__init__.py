@@ -4,7 +4,9 @@ pure-jnp oracle in ref.py and a jitted wrapper in ops.py:
   flash_attention — blockwise online-softmax attention (GQA + window)
   ssd_scan        — Mamba-2 SSD chunked scan (intra-chunk MXU matmuls +
                     VMEM-resident inter-chunk state)
-  distill_kl      — fused large-vocab KL for DENSE's distillation stage
+  distill_kl      — fused large-vocab KL for DENSE's distillation stage,
+                    a custom-VJP kernel *pair*: per-row-stat residuals +
+                    a streaming backward kernel (DESIGN.md §9)
 """
 from repro.kernels.ops import (flash_attention, ssd_scan, distill_kl,
                                distill_kl_mean)

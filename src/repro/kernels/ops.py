@@ -5,10 +5,13 @@ executes the kernel body in Python) — correctness-validated against the
 ``ref.py`` oracles; on TPU they compile to Mosaic. ``interpret`` defaults
 to auto-detection of the backend.
 
-``distill_kl`` carries a custom VJP: the forward pass is the fused online
-kernel; the backward pass uses the analytic gradients
-  d/ds = softmax(s) − softmax(t),  d/dt = p ⊙ ((t−lse_t) − (s−lse_s) − KL)
-evaluated in jnp (a fused backward kernel is a recorded §Perf follow-up).
+``distill_kl`` is the repo's first custom-VJP kernel *pair*
+(kernels/distill_kl.py, DESIGN.md §9): the forward streams online-LSE
+accumulators, persists only the per-row statistics as residuals, and the
+backward is a second Pallas kernel that re-streams the logit blocks to
+emit dL/ds (and optionally dL/dt) — no (R, V) softmax intermediate in
+HBM in either direction. ``with_teacher_grad=False`` skips the dL/dt
+stream for stop-gradient'd teachers (DENSE's student step).
 """
 from __future__ import annotations
 
@@ -20,7 +23,6 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import distill_kl as _kl
 from repro.kernels import ssd_scan as _ssd
-from repro.kernels import ref
 
 
 def _auto_interpret(interpret):
@@ -44,33 +46,16 @@ def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=None):
                          interpret=_auto_interpret(interpret))
 
 
-# ------------------------------------------------- distill_kl + custom VJP
+# ------------------------------------------------- distill_kl (fused VJP)
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def distill_kl(teacher_logits, student_logits, block_rows=256, block_v=2048,
-               interpret=None):
-    return _kl.distill_kl(teacher_logits, student_logits,
-                          block_rows=block_rows, block_v=block_v,
-                          interpret=_auto_interpret(interpret))
-
-
-def _kl_fwd(t, s, block_rows, block_v, interpret):
-    kl = distill_kl(t, s, block_rows, block_v, interpret)
-    return kl, (t, s, kl)
-
-
-def _kl_bwd(block_rows, block_v, interpret, res, g):
-    t, s, kl = res
-    tf, sf = t.astype(jnp.float32), s.astype(jnp.float32)
-    logp = jax.nn.log_softmax(tf, axis=-1)
-    logq = jax.nn.log_softmax(sf, axis=-1)
-    p, q = jnp.exp(logp), jnp.exp(logq)
-    ds = (q - p) * g[:, None]
-    dt = p * (logp - logq - kl[:, None]) * g[:, None]
-    return dt.astype(t.dtype), ds.astype(s.dtype)
-
-
-distill_kl.defvjp(_kl_fwd, _kl_bwd)
+               interpret=None, with_teacher_grad=True):
+    """Per-row KL(softmax(t) ‖ softmax(s)), differentiable via the fused
+    Pallas backward kernel (kernels/distill_kl.distill_kl_vjp). Any
+    (R, V) shape is accepted; tail blocks are masked in-kernel."""
+    return _kl.distill_kl_vjp(teacher_logits, student_logits, block_rows,
+                              block_v, _auto_interpret(interpret),
+                              with_teacher_grad)
 
 
 def distill_kl_mean(teacher_logits, student_logits, **kw):

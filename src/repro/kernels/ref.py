@@ -88,3 +88,14 @@ def distill_kl(teacher_logits, student_logits):
     logp = jax.nn.log_softmax(t, axis=-1)
     logq = jax.nn.log_softmax(s, axis=-1)
     return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
+
+
+def distill_kl_grads(teacher_logits, student_logits, g):
+    """Autodiff gradients of the materialized reference under per-row
+    cotangent ``g`` — the ground truth for the fused custom-VJP kernel
+    pair (kernels/distill_kl.distill_kl_vjp). Deliberately routed through
+    ``jax.vjp`` of the direct formulation, not the analytic formulas the
+    backward kernel implements, so the test compares two genuinely
+    different derivations."""
+    _, pull = jax.vjp(distill_kl, teacher_logits, student_logits)
+    return pull(g.astype(jnp.float32))

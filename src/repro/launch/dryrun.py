@@ -291,8 +291,8 @@ def run_dense_distill_cell(*, multi_pod: bool = False,
                           "t": P()},
                   "step": P()}
         espec = P("data", None, None)
-        step = DL.make_pod_distill_step(cfg, mesh, n_clients=n_clients,
-                                        chunked_kl=chunked_kl)
+        step = ST.make_distill_step(cfg, mesh, n_clients=n_clients,
+                                    chunked_kl=chunked_kl)
         jf = jax.jit(step,
                      in_shardings=(SH.to_named(sspecs, mesh),
                                    SH.to_named(cspecs, mesh),

@@ -1,5 +1,6 @@
-"""Jittable step functions (train / prefill / decode) shared by the real
-drivers (train.py, serve.py) and the multi-pod dry-run (dryrun.py)."""
+"""Jittable step functions (train / distill / prefill / decode) shared by
+the real drivers (train.py, serve.py) and the multi-pod dry-run
+(dryrun.py)."""
 from __future__ import annotations
 
 import functools
@@ -46,6 +47,19 @@ def make_train_step(cfg: ArchConfig, mesh=None, *, lr: float = 3e-4,
         return new_state, metrics
 
     return train_step
+
+
+def make_distill_step(cfg: ArchConfig, mesh, *, n_clients: int, **kw):
+    """The LLM student step: DENSE stage-2 ensemble distillation against a
+    pod-sharded homogeneous client stack (core.dense_llm's production
+    cell, re-exported here so launch drivers and the dry-run route every
+    jittable step — train / distill / prefill / decode — through one
+    module). Keywords (s_lr, chunked_kl, kl_chunk, distill_kl_mode) are
+    forwarded verbatim — core.dense_llm.make_pod_distill_step owns the
+    defaults. distill_kl_mode="fused" runs the KL loss AND its backward
+    through the Pallas custom-VJP kernel pair (DESIGN.md §9)."""
+    from repro.core import dense_llm as DL
+    return DL.make_pod_distill_step(cfg, mesh, n_clients=n_clients, **kw)
 
 
 def make_prefill_step(cfg: ArchConfig, mesh=None):

@@ -1,0 +1,153 @@
+"""scfg.distill_kl_mode routing equivalence: "fused" (the Pallas
+custom-VJP kernel pair, DESIGN.md §9) must reproduce "ref" (materialized
+jnp autodiff) through every layer that consumes it — the loss functions,
+the CNN-scale DENSE server steps (core/dense), and the pod-sharded LLM
+student step (core/dense_llm via launch/steps)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as LS
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- losses --
+
+def test_softmax_kl_fused_matches_ref_with_temperature():
+    ks = jax.random.split(KEY, 2)
+    p = jax.random.normal(ks[0], (12, 200)) * 3
+    q = jax.random.normal(ks[1], (12, 200)) * 3
+    for temp in (1.0, 2.5):
+        a = LS.softmax_kl(p, q, temp)
+        b = LS.softmax_kl(p, q, temp, mode="fused", block_rows=4, block_v=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        # gradients through BOTH logit tensors (incl. the 1/T chain rule)
+        ga = jax.grad(lambda *x: jnp.mean(LS.softmax_kl(*x, temp)),
+                      argnums=(0, 1))(p, q)
+        gb = jax.grad(lambda *x: jnp.mean(LS.softmax_kl(
+            *x, temp, mode="fused", block_rows=4, block_v=64)),
+            argnums=(0, 1))(p, q)
+        for x, y in zip(ga, gb):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+
+
+def test_softmax_kl_fused_accepts_batched_logits():
+    """Both modes share the input contract: any leading batch shape
+    (the fused branch flattens to the kernel's (rows, V) view)."""
+    ks = jax.random.split(KEY, 2)
+    p = jax.random.normal(ks[0], (3, 5, 40)) * 2
+    q = jax.random.normal(ks[1], (3, 5, 40)) * 2
+    a = LS.softmax_kl(p, q)
+    b = LS.softmax_kl(p, q, mode="fused", block_rows=4, block_v=32)
+    assert b.shape == (3, 5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_div_and_distill_loss_fused_match_ref():
+    ks = jax.random.split(KEY, 2)
+    p = jax.random.normal(ks[0], (16, 50)) * 2
+    q = jax.random.normal(ks[1], (16, 50)) * 2
+    np.testing.assert_allclose(float(LS.div_loss(p, q)),
+                               float(LS.div_loss(p, q, mode="fused")),
+                               atol=1e-6)
+    np.testing.assert_allclose(
+        float(LS.distill_loss(p, q)),
+        float(LS.distill_loss(p, q, mode="fused", with_teacher_grad=False)),
+        atol=1e-6)
+
+
+def test_unknown_mode_raises():
+    p = jnp.zeros((2, 4))
+    with pytest.raises(ValueError, match="unknown distill_kl mode"):
+        LS.softmax_kl(p, p, mode="nope")
+
+
+# ------------------------------------------- CNN-scale server (dense) --
+
+def _tiny_setup():
+    from repro.configs.paper_cifar import smoke
+    from repro.core.ensemble import Client
+    from repro.models.cnn import CNNSpec, cnn_init
+    scfg = dataclasses.replace(
+        smoke(), n_clients=2, client_kinds=("cnn1", "cnn1"), t_g=1,
+        epochs=1, synth_batch=16, nz=8, image_size=8)
+    spec = CNNSpec(kind="cnn1", num_classes=scfg.num_classes, in_ch=3,
+                   width=scfg.width, image_size=scfg.image_size)
+    clients = [Client(spec=spec, params=cnn_init(jax.random.PRNGKey(i), spec))
+               for i in range(scfg.n_clients)]
+    return scfg, spec, clients
+
+
+def test_dense_steps_fused_mode_matches_ref():
+    from repro.core import generator as G
+    from repro.core.dense import make_dense_steps
+    from repro.models.cnn import cnn_init
+    scfg, spec, clients = _tiny_setup()
+    z = jax.random.normal(jax.random.PRNGKey(1), (16, scfg.nz))
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0,
+                           scfg.num_classes)
+    outs = {}
+    for mode in ("ref", "fused"):
+        s2 = dataclasses.replace(scfg, distill_kl_mode=mode)
+        gen_step, student_step, g_opt, s_opt, gparams, _, _ = \
+            make_dense_steps(clients, spec, s2)
+        gen_p = G.img_generator_init(jax.random.PRNGKey(0), nz=s2.nz,
+                                     img_size=s2.image_size, out_ch=3)
+        stu_p = cnn_init(jax.random.PRNGKey(5), spec)
+        gp, _, gl, _ = gen_step(gen_p, g_opt.init(gen_p), stu_p, gparams,
+                                z, y)
+        sp, _, dl = student_step(stu_p, s_opt.init(stu_p), gp, gparams, z)
+        outs[mode] = (float(gl), float(dl), sp)
+    # L_div routes the generator step; L_dis the student step
+    np.testing.assert_allclose(outs["ref"][0], outs["fused"][0], rtol=1e-6)
+    np.testing.assert_allclose(outs["ref"][1], outs["fused"][1], rtol=1e-5)
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         outs["ref"][2], outs["fused"][2])
+    assert max(jax.tree_util.tree_leaves(diffs)) < 1e-5
+
+
+def test_make_dense_steps_rejects_unknown_mode():
+    from repro.core.dense import make_dense_steps
+    scfg, spec, clients = _tiny_setup()
+    bad = dataclasses.replace(scfg, distill_kl_mode="pallas")
+    with pytest.raises(ValueError, match="unknown distill_kl mode"):
+        make_dense_steps(clients, spec, bad)
+
+
+# -------------------------------------- LLM student step (launch path) --
+
+def test_pod_distill_step_fused_matches_ref():
+    from repro import optim
+    from repro.configs.base import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_distill_step
+    from repro.models import transformer as T
+    cfg = get_smoke_config("llama3.2-3b")
+    mesh = make_host_mesh(1)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[T.init_model(jax.random.PRNGKey(i), cfg) for i in range(2)])
+    stu = T.init_model(jax.random.PRNGKey(9), cfg)
+    opt = optim.adam(1e-4)
+    emb = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model))
+    results = {}
+    for mode in ("ref", "fused"):
+        state = {"params": stu, "opt": opt.init(stu),
+                 "step": jnp.zeros((), jnp.int32)}
+        with mesh:
+            step = make_distill_step(cfg, mesh, n_clients=2,
+                                     distill_kl_mode=mode)
+            new_state, metrics = jax.jit(step)(state, stacked, emb)
+        results[mode] = (float(metrics["dis_loss"]), new_state["params"])
+    np.testing.assert_allclose(results["ref"][0], results["fused"][0],
+                               rtol=1e-5)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        results["ref"][1], results["fused"][1])
+    assert max(jax.tree_util.tree_leaves(diffs)) < 1e-4

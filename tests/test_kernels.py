@@ -1,13 +1,21 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
 
 Kernels run in interpret mode on CPU (the TPU lowering is exercised by the
-same pallas_call)."""
+same pallas_call).
+
+The distill_kl custom-VJP suite doubles as CI's ``kernel-grads`` matrix:
+``KERNEL_GRAD_DTYPE`` / ``KERNEL_GRAD_BLOCKS`` (e.g. ``bfloat16`` /
+``4x96``) restrict the parametrization to one matrix cell so each CI job
+runs a focused slice; unset (local runs) the full sweep executes."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from _hyp import given, settings, st
 
 KEY = jax.random.PRNGKey(0)
 
@@ -37,6 +45,10 @@ def test_flash_attention_vs_ref(B, Hq, Hkv, Sq, Sk, D, win, dtype):
     (16, 4096, 8, 1024, jnp.float32),
     (4, 1000, 4, 500, jnp.float32),
     (8, 512, 8, 512, jnp.bfloat16),
+    # ragged: V % bv != 0 and/or R % br != 0 (tail blocks masked in-kernel)
+    (8, 384, 8, 100, jnp.float32),
+    (10, 250, 4, 128, jnp.float32),
+    (7, 300, 4, 96, jnp.float32),
 ])
 def test_distill_kl_vs_ref(R, V, br, bv, dtype):
     ks = jax.random.split(KEY, 2)
@@ -48,16 +60,146 @@ def test_distill_kl_vs_ref(R, V, br, bv, dtype):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
 
 
-def test_distill_kl_custom_vjp_matches_ref_grads():
+# ---------------------------------------------- distill_kl custom VJP --
+#
+# The fused backward kernel (kernels/distill_kl.distill_kl_bwd) vs
+# jax.grad of the materialized reference. CI's kernel-grads job runs one
+# (dtype x block-shape) cell per matrix entry via the env vars below.
+
+_GRAD_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+_GRAD_BLOCKS = {"8x128": (8, 128), "4x96": (4, 96)}
+
+
+def _grad_matrix():
+    dt = os.environ.get("KERNEL_GRAD_DTYPE")
+    bl = os.environ.get("KERNEL_GRAD_BLOCKS")
+    dtypes = [dt] if dt else list(_GRAD_DTYPES)
+    blocks = [bl] if bl else list(_GRAD_BLOCKS)
+    return [(d, b) for d in dtypes for b in blocks]
+
+
+def _vjp_pair(t, s, br, bv, g, **kw):
+    _, pull = jax.vjp(lambda a, b: ops.distill_kl(a, b, br, bv, **kw), t, s)
+    return pull(g)
+
+
+@pytest.mark.parametrize("dtype_name,block_name", _grad_matrix())
+@pytest.mark.parametrize("R,V", [(16, 512), (10, 384), (7, 250)])
+def test_distill_kl_vjp_matches_ref_grads(dtype_name, block_name, R, V):
+    dtype = _GRAD_DTYPES[dtype_name]
+    br, bv = _GRAD_BLOCKS[block_name]
+    ks = jax.random.split(KEY, 3)
+    t = (jax.random.normal(ks[0], (R, V)) * 3).astype(dtype)
+    s = (jax.random.normal(ks[1], (R, V)) * 3).astype(dtype)
+    g = jax.random.normal(ks[2], (R,))          # non-uniform cotangent
+    dt, ds = _vjp_pair(t, s, br, bv, g)
+    dt_r, ds_r = ref.distill_kl_grads(t, s, g)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(dt, np.float32),
+                               np.asarray(dt_r, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(ds, np.float32),
+                               np.asarray(ds_r, np.float32), atol=tol)
+
+
+def test_distill_kl_vjp_neg_inf_padding_columns():
+    """NEG_INF-padded vocab columns (ragged-vocab convention): zero KL
+    contribution and exactly-zero gradients on the padded lanes."""
+    from repro.kernels.distill_kl import NEG_INF
+    R, V, real = 8, 320, 300
+    ks = jax.random.split(KEY, 3)
+    t = jax.random.normal(ks[0], (R, V)) * 3
+    s = jax.random.normal(ks[1], (R, V)) * 3
+    t = t.at[:, real:].set(NEG_INF)
+    s = s.at[:, real:].set(NEG_INF)
+    out = ops.distill_kl(t, s, 4, 128)
+    want = ref.distill_kl(t[:, :real], s[:, :real])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+    g = jax.random.normal(ks[2], (R,))
+    dt, ds = _vjp_pair(t, s, 4, 128, g)
+    dt_r, ds_r = ref.distill_kl_grads(t, s, g)
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_r), atol=1e-5)
+    assert float(jnp.max(jnp.abs(dt[:, real:]))) == 0.0
+    assert float(jnp.max(jnp.abs(ds[:, real:]))) == 0.0
+
+
+def test_distill_kl_vjp_extreme_logits():
+    """±1e4 logits: the online-LSE stats and the streamed backward must
+    stay finite and track the reference (f32 rounding at this scale is
+    ~1e-3 absolute, identical for both formulations)."""
+    ks = jax.random.split(KEY, 3)
+    R, V = 8, 256
+    t = jax.random.choice(ks[0], jnp.array([-1e4, 0.0, 1e4]), (R, V)) \
+        + jax.random.normal(ks[1], (R, V))
+    s = jnp.roll(t, 7, axis=1) + jax.random.normal(ks[2], (R, V))
+    out = ops.distill_kl(t, s, 4, 64)
+    want = ref.distill_kl(t, s)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-2)
+    g = jnp.ones((R,)) / R
+    dt, ds = _vjp_pair(t, s, 4, 64, g)
+    dt_r, ds_r = ref.distill_kl_grads(t, s, g)
+    assert bool(jnp.all(jnp.isfinite(dt))) and bool(jnp.all(jnp.isfinite(ds)))
+    # dt entries are p * ((t - lse_t) - (s - lse_s) - KL): differences of
+    # 1e4-scale f32 terms, so ~1e-3 relative agreement is the f32 floor
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_r),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_r),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_distill_kl_vjp_without_teacher_grad():
+    """with_teacher_grad=False: identical dL/ds, zeros dL/dt (the stream
+    is skipped for stop-gradient'd teachers)."""
     ks = jax.random.split(KEY, 2)
-    t = jax.random.normal(ks[0], (4, 64))
-    s = jax.random.normal(ks[1], (4, 64))
-    for argnum in (0, 1):
-        g1 = jax.grad(lambda *a: jnp.mean(ops.distill_kl(*a, 4, 64)),
-                      argnums=argnum)(t, s)
-        g2 = jax.grad(lambda *a: jnp.mean(ref.distill_kl(*a)),
-                      argnums=argnum)(t, s)
-        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+    t = jax.random.normal(ks[0], (6, 130))
+    s = jax.random.normal(ks[1], (6, 130))
+    g = jnp.ones((6,))
+    dt, ds = _vjp_pair(t, s, 4, 64, g, with_teacher_grad=False)
+    _, ds_full = _vjp_pair(t, s, 4, 64, g)
+    assert float(jnp.max(jnp.abs(dt))) == 0.0
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_full), atol=0)
+
+
+def test_distill_kl_forward_persists_stats():
+    """return_stats=True: the persisted accumulators reconstruct the
+    row log-sum-exps and the KL identity KL = S/Z_t - lse_t + lse_s."""
+    from repro.kernels.distill_kl import distill_kl
+    ks = jax.random.split(KEY, 2)
+    t = jax.random.normal(ks[0], (8, 300)) * 3
+    s = jax.random.normal(ks[1], (8, 300)) * 3
+    kl, (mt, zt, st, ms, zs) = distill_kl(t, s, block_rows=4, block_v=128,
+                                          interpret=True, return_stats=True)
+    lse_t = mt + jnp.log(zt)
+    lse_s = ms + jnp.log(zs)
+    np.testing.assert_allclose(np.asarray(lse_t),
+                               np.asarray(jax.nn.logsumexp(t, axis=-1)),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_s),
+                               np.asarray(jax.nn.logsumexp(s, axis=-1)),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st / zt - lse_t + lse_s),
+                               np.asarray(kl), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(2, 160), st.integers(1, 5),
+       st.integers(1, 70), st.integers(0, 2 ** 31 - 1))
+def test_distill_kl_vjp_property(R, V, br, bv, seed):
+    """Property: for ANY (R, V, block) combination — divisible or not —
+    fused forward and VJP match the materialized reference."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t = jax.random.normal(ks[0], (R, V)) * 4
+    s = jax.random.normal(ks[1], (R, V)) * 4
+    g = jax.random.normal(ks[2], (R,))
+    out = ops.distill_kl(t, s, br, bv)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.distill_kl(t, s)), atol=2e-5)
+    dt, ds = _vjp_pair(t, s, br, bv, g)
+    dt_r, ds_r = ref.distill_kl_grads(t, s, g)
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_r), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_r), atol=2e-5)
 
 
 @pytest.mark.parametrize("B,S,H,P,G,N,cl", [
