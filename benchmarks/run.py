@@ -12,13 +12,15 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   F3  one-shot FedAvg vs DENSE vs local models               [Figure 3]
   K   kernel microbenches (vs jnp oracle on CPU)             [kernels/]
   KL  distill-KL fwd / fwd+bwd, ref vs fused custom-VJP      [§Perf]
+  ATTN flash-attention fwd / fwd+bwd, ref vs fused VJP pair  [§Perf]
+  SSD  ssd chunked scan fwd / fwd+bwd, ref vs fused VJP pair [§Perf]
   E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
   C   client local training looped vs grouped engine         [§Perf]
   S   client-axis mesh sharding vs single-device grouped     [§Perf]
   R   roofline summary from dry-run artifacts                [§Roofline]
 
 ``--json PATH`` additionally writes every emitted record plus per-table
-medians as one machine-readable document (the BENCH_PR4.json perf
+medians as one machine-readable document (the BENCH_PR5.json perf
 trajectory artifact; scripts/tier1.sh writes it, CI uploads it and
 benchmarks/check_regression.py gates PRs on the per-series medians).
 """
@@ -220,6 +222,122 @@ def kl_distill(full: bool):
     emit(f"kl/residual_bytes/{shape}", 0.0,
          (f"ref={rb};fused={fb};ratio={rb / fb:.0f}x;"
           f"paper_scale_4096x262144:ref={rb_p};fused={fb_p}"))
+
+
+def attn_flash(full: bool):
+    """ATTN: blockwise attention forward and forward+backward, ref
+    (materialized XLA softmax + autodiff) vs the streaming custom-VJP
+    Pallas pair (kernels/flash_attention, DESIGN.md §9). Like the kl
+    table, the CPU µs columns measure the interpreter — the trackable
+    claims are grad-equivalence error and the analytic fwd→bwd residual
+    bytes, which are backend-free."""
+    from repro.kernels import ops, ref
+    B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
+    bq = bk = 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    g = jax.random.normal(ks[3], (B, Hq, S, D))
+    iters = 5 if full else 3
+
+    f_ref = jax.jit(lambda a, b, c: ref.attention(a, b, c))
+    f_fus = jax.jit(lambda a, b, c: ops.flash_attention(
+        a, b, c, block_q=bq, block_k=bk, vjp_mode="fused"))
+
+    def fwdbwd(fwd):
+        def run(a, b, c):
+            out, pull = jax.vjp(fwd, a, b, c)
+            return out, pull(g)
+        return jax.jit(run)
+
+    fb_ref = fwdbwd(lambda a, b, c: ref.attention(a, b, c))
+    fb_fus = fwdbwd(lambda a, b, c: ops.flash_attention(
+        a, b, c, block_q=bq, block_k=bk, vjp_mode="fused"))
+
+    err_f = float(jnp.max(jnp.abs(f_fus(q, k, v) - f_ref(q, k, v))))
+    (_, gr), (_, gk) = fb_ref(q, k, v), fb_fus(q, k, v)
+    err_b = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(gk, gr))
+
+    shape = f"{S}x{D}"
+    for name, fn in (("fwd/ref", f_ref), ("fwd/fused", f_fus),
+                     ("fwdbwd/ref", fb_ref), ("fwdbwd/fused", fb_fus)):
+        dt = time_call(fn, q, k, v, warmup=1, iters=iters)
+        err = err_f if name.startswith("fwd/") else err_b
+        emit(f"attn/{name}/{shape}", dt, f"max_err={err:.2e};interpret=cpu")
+
+    # analytic residual bytes fwd->bwd: ref/autodiff keeps the (B,Hq,S,S)
+    # f32 probability matrix alive between the passes; the fused pair
+    # keeps only the f32 output + per-row lse (flash_attention._vjp_fwd;
+    # inputs are alive in both cases)
+    def residuals(b_, h_, s_, d_):
+        return 4 * b_ * h_ * s_ * s_, 4 * b_ * h_ * s_ * (d_ + 1)
+    rb, fb = residuals(B, Hq, S, D)
+    rb_p, fb_p = residuals(1, 32, 32768, 128)
+    emit(f"attn/residual_bytes/{shape}", 0.0,
+         (f"ref={rb};fused={fb};ratio={rb / fb:.0f}x;"
+          f"prefill_32k_1x32x32768x128:ref={rb_p};fused={fb_p}"))
+
+
+def ssd_table(full: bool):
+    """SSD: the Mamba-2 chunked scan forward and forward+backward, ref
+    (sequential jnp recurrence + autodiff) vs the reversed-recurrence
+    custom-VJP Pallas pair (kernels/ssd_scan, DESIGN.md §9). Same CPU
+    caveat as attn/kl: µs measures the interpreter; grad error and
+    residual bytes are the backend-free claims."""
+    from repro.kernels import ops, ref
+    B, S, H, P, G, N = 1, 256, 4, 32, 1, 32
+    cl = 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt_in = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    gy = jax.random.normal(ks[5], (B, S, H, P))
+    gs = jax.random.normal(ks[6], (B, H, P, N)) * 0.1
+    iters = 5 if full else 3
+
+    f_ref = jax.jit(lambda *ar: ref.ssd(*ar))
+    f_fus = jax.jit(lambda *ar: ops.ssd_scan(*ar, chunk=cl,
+                                             vjp_mode="fused"))
+
+    def fwdbwd(fwd):
+        def run(*ar):
+            (y, st), pull = jax.vjp(fwd, *ar)
+            return y, pull((gy, gs))
+        return jax.jit(run)
+
+    fb_ref = fwdbwd(lambda *ar: ref.ssd(*ar))
+    fb_fus = fwdbwd(lambda *ar: ops.ssd_scan(*ar, chunk=cl,
+                                             vjp_mode="fused"))
+
+    args = (x, dt_in, a, b, c)
+    (y1, s1), (y2, s2) = f_ref(*args), f_fus(*args)
+    err_f = max(float(jnp.max(jnp.abs(y1 - y2))),
+                float(jnp.max(jnp.abs(s1 - s2))))
+    (_, gr), (_, gk) = fb_ref(*args), fb_fus(*args)
+    err_b = max(float(jnp.max(jnp.abs(a_ - b_)))
+                for a_, b_ in zip(gk, gr))
+
+    shape = f"{S}x{H}x{P}"
+    for name, fn in (("fwd/ref", f_ref), ("fwd/fused", f_fus),
+                     ("fwdbwd/ref", fb_ref), ("fwdbwd/fused", fb_fus)):
+        dt = time_call(fn, *args, warmup=1, iters=iters)
+        err = err_f if name.startswith("fwd/") else err_b
+        emit(f"ssd/{name}/{shape}", dt, f"max_err={err:.2e};interpret=cpu")
+
+    # analytic residual bytes fwd->bwd: autodiff of the recurrence keeps
+    # the full (B,S,H,P,N) f32 state history; the fused pair keeps one
+    # carried state per CHUNK (ssd_scan._vjp_fwd) — ratio = chunk length
+    def residuals(b_, s_, h_, p_, n_, cl_):
+        return 4 * b_ * s_ * h_ * p_ * n_, \
+            4 * b_ * h_ * (-(-s_ // cl_)) * p_ * n_
+    rb, fb = residuals(B, S, H, P, N, cl)
+    rb_p, fb_p = residuals(1, 32768, 64, 64, 128, 256)
+    emit(f"ssd/residual_bytes/{shape}", 0.0,
+         (f"ref={rb};fused={fb};ratio={rb / fb:.0f}x;"
+          f"prefill_32k_1x32768x64x64x128:ref={rb_p};fused={fb_p}"))
 
 
 def e_ensemble(full: bool):
@@ -511,8 +629,8 @@ def r_roofline(full: bool):
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
           "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
-          "e": e_ensemble, "c": c_client_training, "s": s_sharding,
-          "r": r_roofline}
+          "attn": attn_flash, "ssd": ssd_table, "e": e_ensemble,
+          "c": c_client_training, "s": s_sharding, "r": r_roofline}
 
 
 def main() -> None:
@@ -524,7 +642,7 @@ def main() -> None:
                     help="comma list of tables, e.g. t1,t6,k")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records + per-table medians as JSON "
-                         "(the BENCH_PR4.json trajectory artifact)")
+                         "(the BENCH_PR5.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)

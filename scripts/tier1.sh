@@ -3,17 +3,17 @@
 #   ./scripts/tier1.sh [--fast] [extra pytest args]
 #
 # Default: the ROADMAP tier-1 test command, then the kernel (k),
-# distill-KL custom-VJP (kl), ensemble/epoch-driver (e),
+# custom-VJP pair (kl, attn, ssd), ensemble/epoch-driver (e),
 # grouped-client-training (c) and client-axis sharding (s) benchmark
 # tables — printed as CSV and written as the machine-readable
-# BENCH_PR4.json trajectory artifact (benchmarks/run.py --json; CI
+# BENCH_PR5.json trajectory artifact (benchmarks/run.py --json; CI
 # uploads it and benchmarks/check_regression.py gates PRs against the
 # committed previous-PR baseline).
 #
 # --fast: tight-time-budget gate — skips tests marked `slow` (the long
 # grouped-vs-python equivalence sweeps, see tests/conftest.py) and the
 # benchmark tables. NOTE: because the tables are skipped, --fast does
-# NOT emit BENCH_PR4.json; CI's bench job calls benchmarks/run.py --json
+# NOT emit BENCH_PR5.json; CI's bench job calls benchmarks/run.py --json
 # directly instead.
 #
 # Exit code: nonzero iff any step fails. `set -e` aborts on the first
@@ -32,5 +32,5 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python benchmarks/run.py --only k,kl,e,c,s --json BENCH_PR4.json
+  python benchmarks/run.py --only k,kl,attn,ssd,e,c,s --json BENCH_PR5.json
 exit 0

@@ -86,20 +86,47 @@ def embed_stats_loss(client_cfgs, client_params, embeds):
     return total / len(client_cfgs)
 
 
+def _reject_autodiff_mode(kernel_vjp_mode: str) -> None:
+    """Both step builders differentiate through the trunk, and jax cannot
+    differentiate the bare forward kernels (the pallas_call JVP rule
+    rejects ``pl.program_id`` bodies) — fail at build time with a real
+    message instead of deep inside grad tracing. "autodiff" remains valid
+    only for forward-only callers of kernels/ops.py (serving)."""
+    if kernel_vjp_mode == "autodiff":
+        raise ValueError(
+            "kernel_vjp_mode='autodiff' cannot train: jax cannot "
+            "differentiate through the forward Pallas kernels — use "
+            "'ref' or 'fused' (DESIGN.md §9)")
+
+
 def make_llm_dense_steps(student_cfg: ArchConfig,
                          client_cfgs: Sequence[ArchConfig], *,
                          gen_seq: int = 64, nz: int = 64,
                          g_lr: float = 1e-3, s_lr: float = 1e-4,
                          lambda_bn: float = 1.0, lambda_div: float = 0.5,
                          mesh=None, dp_axes=(),
-                         distill_kl_mode: str = "ref"):
+                         distill_kl_mode: str = "ref",
+                         kernel_vjp_mode: str = "ref"):
     """Jitted (gen_step, student_step) for a heterogeneous LM federation
     (host/smoke scale; the pod-sharded path is make_pod_distill_step).
 
     distill_kl_mode: "ref" or "fused" — both L_dis and L_div route
     through losses.softmax_kl, so "fused" streams the (tokens, V) KL and
-    its gradients through the Pallas kernel pair (DESIGN.md §9)."""
+    its gradients through the Pallas kernel pair (DESIGN.md §9).
+
+    kernel_vjp_mode: "ref", "autodiff" or "fused" — routes every client's
+    and the student's attention/SSM layers through kernels/ops.py (the
+    same §9 pattern, two more pairs): "fused" differentiates the trunk
+    through the streaming custom-VJP kernels — the student backward in
+    student_step AND the generator gradients that flow through the
+    client/student forwards in gen_step."""
+    from repro.kernels import ops as kops
     LS.check_mode(distill_kl_mode)
+    kops.check_kernel_vjp_mode(kernel_vjp_mode)
+    _reject_autodiff_mode(kernel_vjp_mode)
+    student_cfg = student_cfg.replace(kernel_vjp_mode=kernel_vjp_mode)
+    client_cfgs = [c.replace(kernel_vjp_mode=kernel_vjp_mode)
+                   for c in client_cfgs]
     g_opt = optim.adam(g_lr)
     s_opt = optim.adam(s_lr)
     V = student_cfg.vocab_size
@@ -161,7 +188,8 @@ def pod_stack_specs(param_specs_tree, mesh):
 
 def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
                           s_lr: float = 1e-4, chunked_kl: bool = False,
-                          kl_chunk: int = 64, distill_kl_mode: str = "ref"):
+                          kl_chunk: int = 64, distill_kl_mode: str = "ref",
+                          kernel_vjp_mode: str = "ref"):
     """The paper-representative production cell: DENSE stage-2 distillation
     with a homogeneous client stack vmapped over a leading ensemble dim.
 
@@ -180,8 +208,18 @@ def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
     the Pallas custom-VJP kernel pair ("fused", DESIGN.md §9) instead of
     jnp autodiff ("ref"). Orthogonal to chunked_kl, which avoids the
     logit tensors altogether and keeps its internal ref-mode KL.
+
+    kernel_vjp_mode routes the trunk's attention/SSM layers through the
+    same §9 pattern (kernels/ops.py): "fused" differentiates the
+    student's blocks through the streaming custom-VJP kernel pairs —
+    at LLM scale this removes the O(S²) softmax / per-chunk state
+    rematerialization that backprop through the XLA forward keeps alive.
     """
+    from repro.kernels import ops as kops
     LS.check_mode(distill_kl_mode)
+    kops.check_kernel_vjp_mode(kernel_vjp_mode)
+    _reject_autodiff_mode(kernel_vjp_mode)
+    cfg = cfg.replace(kernel_vjp_mode=kernel_vjp_mode)
     s_opt = optim.adam(s_lr)
     dp = tuple(a for a in ("data",) if a in mesh.axis_names)
     V = cfg.vocab_size

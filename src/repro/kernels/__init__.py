@@ -1,16 +1,29 @@
 """Pallas TPU kernels for the perf-critical compute layers, each with a
-pure-jnp oracle in ref.py and a jitted wrapper in ops.py:
+pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
 
-  flash_attention — blockwise online-softmax attention (GQA + window)
+All three differentiated kernels are custom-VJP kernel *pairs*
+(DESIGN.md §9): streaming forwards persisting only per-row/per-tile
+statistics as residuals, plus streaming backward kernels —
+
+  flash_attention — blockwise online-softmax attention (GQA + window);
+                    backward re-streams k-/q-blocks from (m, l) row stats
   ssd_scan        — Mamba-2 SSD chunked scan (intra-chunk MXU matmuls +
-                    VMEM-resident inter-chunk state)
-  distill_kl      — fused large-vocab KL for DENSE's distillation stage,
-                    a custom-VJP kernel *pair*: per-row-stat residuals +
-                    a streaming backward kernel (DESIGN.md §9)
+                    VMEM-resident inter-chunk state, initial_state
+                    seeding); backward walks chunks in reverse from the
+                    per-chunk carried states
+  distill_kl      — fused large-vocab KL for DENSE's distillation stage;
+                    backward re-streams vocab blocks from online-LSE
+                    stats
+
+flash_attention/ssd_scan are routed by ``vjp_mode`` (ops.py /
+``scfg.kernel_vjp_mode``): "ref" oracle, "autodiff" bare forward kernel
+(not differentiable — jax's pallas_call JVP rule rejects the kernels),
+"fused" custom-VJP pair.
 """
 from repro.kernels.ops import (flash_attention, ssd_scan, distill_kl,
-                               distill_kl_mean)
+                               distill_kl_mean, check_kernel_vjp_mode,
+                               KERNEL_VJP_MODES)
 from repro.kernels import ref
 
 __all__ = ["flash_attention", "ssd_scan", "distill_kl", "distill_kl_mean",
-           "ref"]
+           "check_kernel_vjp_mode", "KERNEL_VJP_MODES", "ref"]

@@ -5,13 +5,35 @@ executes the kernel body in Python) — correctness-validated against the
 ``ref.py`` oracles; on TPU they compile to Mosaic. ``interpret`` defaults
 to auto-detection of the backend.
 
-``distill_kl`` is the repo's first custom-VJP kernel *pair*
-(kernels/distill_kl.py, DESIGN.md §9): the forward streams online-LSE
-accumulators, persists only the per-row statistics as residuals, and the
-backward is a second Pallas kernel that re-streams the logit blocks to
-emit dL/ds (and optionally dL/dt) — no (R, V) softmax intermediate in
-HBM in either direction. ``with_teacher_grad=False`` skips the dL/dt
-stream for stop-gradient'd teachers (DENSE's student step).
+Every differentiated kernel is a custom-VJP kernel *pair* (DESIGN.md §9):
+the forward streams blocks with online accumulators and persists only
+per-row/per-tile statistics as residuals, the backward is a second Pallas
+kernel that re-streams the blocks to emit the gradients — no quadratic
+softmax / state-history intermediate in HBM in either direction.
+
+  * ``distill_kl``     — per-row online-LSE stats; the backward
+    re-streams vocab blocks for dL/ds (and optionally dL/dt;
+    ``with_teacher_grad=False`` skips that stream for stop-gradient'd
+    teachers — DENSE's student step).
+  * ``flash_attention``— per-row (m, l) softmax stats; the backward
+    re-streams k-blocks (dq) and q-blocks (dk/dv, GQA group-accumulated
+    in the revisited output block).
+  * ``ssd_scan``       — per-chunk carried states; the backward walks
+    the chunks in reverse carrying the state cotangent.
+
+``vjp_mode`` routes flash_attention/ssd_scan (``scfg.kernel_vjp_mode``,
+mirroring ``distill_kl_mode``):
+
+  * ``"ref"``      — the pure-jnp oracle (materialized softmax /
+    sequential recurrence), differentiated by jax autodiff. CPU-host
+    default at the model layer.
+  * ``"autodiff"`` — the forward Pallas kernel alone. Forward-only in
+    practice: jax's pallas_call JVP rule rejects ``pl.program_id``
+    bodies, so differentiating this path raises — kept as the
+    no-gradient serving route and as documentation of WHY the kernel
+    pairs exist.
+  * ``"fused"``    — the custom-VJP kernel pair (the only differentiable
+    kernel path).
 """
 from __future__ import annotations
 
@@ -23,6 +45,18 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import distill_kl as _kl
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+
+KERNEL_VJP_MODES = ("ref", "autodiff", "fused")
+
+
+def check_kernel_vjp_mode(mode: str) -> None:
+    """Fail fast on an unknown kernel_vjp_mode — part of the public
+    contract (model applies and the dense_llm step builders validate at
+    build time, before anything jits)."""
+    if mode not in KERNEL_VJP_MODES:
+        raise ValueError(f"unknown kernel_vjp mode {mode!r} "
+                         f"(expected one of {KERNEL_VJP_MODES})")
 
 
 def _auto_interpret(interpret):
@@ -32,18 +66,43 @@ def _auto_interpret(interpret):
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "vjp_mode"))
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret=None):
+                    block_k=128, interpret=None, vjp_mode="autodiff"):
+    """Blockwise attention, routed by ``vjp_mode`` (see module docstring).
+    Any Sq/Sk is accepted; tail blocks are masked in-kernel."""
+    check_kernel_vjp_mode(vjp_mode)
+    if vjp_mode == "ref":
+        return _ref.attention(q, k, v, causal=causal, window=window)
+    if vjp_mode == "fused":
+        return _fa.flash_attention_vjp(q, k, v, causal, window, None,
+                                       block_q, block_k,
+                                       _auto_interpret(interpret))
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=_auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=None):
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "vjp_mode"))
+def ssd_scan(x, dt, a, b, c, initial_state=None, *, chunk=128,
+             interpret=None, vjp_mode="autodiff"):
+    """SSD chunked scan, routed by ``vjp_mode`` (see module docstring).
+    Any S is accepted (masked tail chunk); ``initial_state`` (B,H,P,N)
+    seeds the recurrence (prefill→decode handoff)."""
+    check_kernel_vjp_mode(vjp_mode)
+    if vjp_mode == "ref":
+        return _ref.ssd(x, dt, a, b, c, initial_state=initial_state)
+    if vjp_mode == "fused":
+        if initial_state is None:
+            B, _, H, P = x.shape
+            initial_state = jnp.zeros((B, H, P, b.shape[3]), jnp.float32)
+        return _ssd.ssd_scan_vjp(x, dt, a, b, c, initial_state, chunk,
+                                 _auto_interpret(interpret))
     return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
-                         interpret=_auto_interpret(interpret))
+                         interpret=_auto_interpret(interpret),
+                         initial_state=initial_state)
 
 
 # ------------------------------------------------- distill_kl (fused VJP)

@@ -43,6 +43,20 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.reshape(B, Hq, Sq, D).astype(q.dtype)
 
 
+def attention_grads(q, k, v, g, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """Autodiff gradients of the materialized reference under output
+    cotangent ``g`` — the ground truth for the streaming custom-VJP
+    kernel pair (kernels/flash_attention.flash_attention_vjp).
+    Deliberately routed through ``jax.vjp`` of the direct formulation,
+    not the recomputed-p flash recurrence the backward kernels implement,
+    so the test compares two genuinely different derivations."""
+    _, pull = jax.vjp(
+        lambda q_, k_, v_: attention(q_, k_, v_, causal=causal,
+                                     window=window, scale=scale), q, k, v)
+    return pull(g)
+
+
 # --------------------------------------------------------------- ssd scan --
 
 def ssd(x, dt, a, b, c, *, initial_state=None):
@@ -74,6 +88,18 @@ def ssd(x, dt, a, b, c, *, initial_state=None):
           jnp.moveaxis(bb, 1, 0), jnp.moveaxis(cc, 1, 0))
     final, ys = jax.lax.scan(step, s0, xs)
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def ssd_grads(x, dt, a, b, c, initial_state, g_y, g_state):
+    """Autodiff gradients of the sequential-recurrence reference under
+    cotangents ``(g_y, g_state)`` — the ground truth for the
+    reversed-recurrence custom-VJP kernel pair
+    (kernels/ssd_scan.ssd_scan_vjp). Returns
+    (dx, ddt, da, db, dc, dinitial_state)."""
+    _, pull = jax.vjp(
+        lambda *ar: ssd(*ar[:5], initial_state=ar[5]),
+        x, dt, a, b, c, initial_state)
+    return pull((g_y.astype(x.dtype), g_state.astype(jnp.float32)))
 
 
 # ------------------------------------------------------------- distill KL --

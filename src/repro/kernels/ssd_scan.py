@@ -1,4 +1,5 @@
-"""Mamba-2 SSD chunked-scan Pallas TPU kernel (arXiv:2405.21060).
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel *pair* (arXiv:2405.21060) —
+forward plus a streaming custom-VJP backward (DESIGN.md §9).
 
 Per (batch, head) the sequence is processed in chunks: the intra-chunk
 quadratic term is a masked (cl x cl) matmul — MXU work — and the running
@@ -9,6 +10,24 @@ which Pallas TPU executes sequentially).
 This is the TPU-native adaptation of the paper-adjacent GPU scan: no warp
 shuffles / selective-scan CUDA kernel, instead blockwise matmuls shaped
 for the MXU + a VMEM-resident recurrence.
+
+Differentiation (``ssd_scan_vjp``): jax autodiff cannot transpose this
+kernel (the pallas_call JVP rule rejects ``pl.program_id`` bodies), and
+an unrolled-recurrence formulation would keep the full (S, P, N) state
+history alive between the passes. Instead the forward persists only the
+per-chunk *carried* states (nc = ceil(S/chunk) snapshots, the state
+entering each chunk) and the backward kernel walks the chunks in REVERSE,
+carrying the state cotangent dS in a revisited output block and
+recomputing each chunk's intra-chunk quantities from the inputs — the
+state history between chunk boundaries is never materialized in either
+pass. The dS carry's final content is d(initial_state) for free.
+
+Ragged lengths are handled in-kernel: the tail chunk's out-of-range lanes
+are zeroed before any arithmetic (dt = 0 ⇒ zero decay and zero state
+deposit, so the masked tail contributes nothing to the carried state) —
+no S % chunk restriction. ``initial_state`` seeds the recurrence (the
+prefill→decode handoff the kernel used to silently drop: it zeroed the
+state carry unconditionally while the ``ref.ssd`` oracle honored it).
 """
 from __future__ import annotations
 
@@ -19,19 +38,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
-                cl: int):
+def _load_chunk(x_ref, dt_ref, b_ref, c_ref, ci, *, cl: int, S: int,
+                mask_tail: bool):
+    """Load one chunk's operands in f32, zeroing the ragged tail lanes.
+
+    dt = 0 on a masked lane kills every coupling of that lane: its decay
+    contribution (da = dt*a = 0 keeps the cumsum flat), its intra-chunk
+    column (att carries a dt_s factor) and its state deposit (w = dt * e).
+    x/b/c are zeroed too because Pallas pads out-of-range reads with
+    undefined values (NaN in interpret mode) and 0 * NaN = NaN."""
+    x = x_ref[0, :, 0].astype(jnp.float32)                # (cl, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)              # (cl,)
+    bmat = b_ref[0, :, 0].astype(jnp.float32)             # (cl, N)
+    cmat = c_ref[0, :, 0].astype(jnp.float32)             # (cl, N)
+    if mask_tail:
+        pos = ci * cl + jax.lax.broadcasted_iota(jnp.int32, (cl, 1), 0)
+        valid = pos < S
+        x = jnp.where(valid, x, 0.0)
+        dt = jnp.where(valid[:, 0], dt, 0.0)
+        bmat = jnp.where(valid, bmat, 0.0)
+        cmat = jnp.where(valid, cmat, 0.0)
+    return x, dt, bmat, cmat
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref, y_ref,
+                state_ref, *opt_refs, cl: int, S: int, mask_tail: bool,
+                save_states: bool):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
+        state_ref[0, 0] = init_ref[0, 0].astype(jnp.float32)
 
-    x = x_ref[0, :, 0].astype(jnp.float32)                # (cl, P)
-    dt = dt_ref[0, :, 0].astype(jnp.float32)              # (cl,)
+    if save_states:
+        # persist the state ENTERING this chunk — the custom-VJP residual
+        opt_refs[0][0, 0, 0] = state_ref[0, 0]
+
+    x, dt, bmat, cmat = _load_chunk(x_ref, dt_ref, b_ref, c_ref, ci,
+                                    cl=cl, S=S, mask_tail=mask_tail)
     a = a_ref[0].astype(jnp.float32)                      # scalar
-    bmat = b_ref[0, :, 0].astype(jnp.float32)             # (cl, N)
-    cmat = c_ref[0, :, 0].astype(jnp.float32)             # (cl, N)
 
     da = dt * a                                           # (cl,) log-decays
     cs = jnp.cumsum(da)                                   # within-chunk cumsum
@@ -63,20 +108,41 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
     state_ref[0, 0] = jnp.exp(cs[-1]) * state + outer
 
 
-def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False):
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False,
+             initial_state=None, return_chunk_states: bool = False):
     """SSD forward. x:(B,S,H,P) dt:(B,S,H) a:(H,) b/c:(B,S,G,N).
 
     Returns (y: (B,S,H,P), final_state: (B,H,P,N)). G groups broadcast over
-    heads via the b/c index maps (no repeat materialized).
+    heads via the b/c index maps (no repeat materialized). Any S is
+    accepted (the tail chunk is masked in-kernel). ``initial_state``
+    (B,H,P,N) seeds the recurrence — the prefill→decode handoff.
+    ``return_chunk_states=True`` additionally returns the (B,H,nc,P,N)
+    per-chunk carried states — the custom-VJP residuals (persisted
+    instead of recomputed).
     """
     B, S, H, P = x.shape
     G, N = b.shape[2], b.shape[3]
     cl = min(chunk, S)
-    assert S % cl == 0, (S, cl)
-    nc = S // cl
+    nc = pl.cdiv(S, cl)
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
 
-    y, state = pl.pallas_call(
-        functools.partial(_ssd_kernel, cl=cl),
+    out_specs = [
+        pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+        pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+    ]
+    if return_chunk_states:
+        out_specs.append(pl.BlockSpec((1, 1, 1, P, N),
+                                      lambda bi, h, ci: (bi, h, ci, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, H, nc, P, N), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_ssd_kernel, cl=cl, S=S, mask_tail=(S % cl) != 0,
+                          save_states=return_chunk_states),
         grid=(B, H, nc),
         in_specs=[
             pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
@@ -86,15 +152,206 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False):
                          lambda bi, h, ci: (bi, ci, h * G // H, 0)),
             pl.BlockSpec((1, cl, 1, N),
                          lambda bi, h, ci: (bi, ci, h * G // H, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, dt, a, b, c, initial_state)
+    if return_chunk_states:
+        return outs[0], outs[1], outs[2]
+    return outs[0], outs[1]
+
+
+# ------------------------------------------------------- fused backward --
+
+def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, st_ref, dy_ref,
+                    dfin_ref, dx_ref, ddt_ref, dbh_ref, dch_ref, dap_ref,
+                    dinit_ref, *, cl: int, nc: int, S: int,
+                    mask_tail: bool):
+    """One chunk of the reversed inter-chunk recurrence.
+
+    The grid's innermost axis runs ci = 0..nc-1 while every index map
+    reads chunk rc = nc-1-ci, so the kernel sees the chunks LAST-first.
+    ``dinit_ref`` doubles as the dS carry (revisited across ci): it is
+    seeded with the final-state cotangent, updated with each chunk's
+    d(state-in), and its content after the last grid step IS the
+    initial-state gradient."""
+    ci = pl.program_id(2)
+    rc = nc - 1 - ci                                      # original chunk id
+
+    @pl.when(ci == 0)
+    def _init():
+        dap_ref[...] = jnp.zeros_like(dap_ref)
+        dinit_ref[0, 0] = dfin_ref[0, 0].astype(jnp.float32)
+
+    x, dt, bmat, cmat = _load_chunk(x_ref, dt_ref, b_ref, c_ref, rc,
+                                    cl=cl, S=S, mask_tail=mask_tail)
+    a = a_ref[0].astype(jnp.float32)
+    dy = dy_ref[0, :, 0].astype(jnp.float32)              # (cl, P)
+    if mask_tail:
+        pos = rc * cl + jax.lax.broadcasted_iota(jnp.int32, (cl, 1), 0)
+        dy = jnp.where(pos < S, dy, 0.0)
+    s_in = st_ref[0, 0, 0]                                # (P, N)
+    ds_out = dinit_ref[0, 0]                              # (P, N)
+
+    # ---- recompute the forward chunk quantities (cheap, chunk-local)
+    da = dt * a
+    cs = jnp.cumsum(da)
+    seg = cs[:, None] - cs[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0) \
+        >= jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    att = cb * decay * dt[None, :]
+    ecs = jnp.exp(cs)
+    w = dt * jnp.exp(cs[-1] - cs)
+    y_off = ecs[:, None] * jax.lax.dot_general(
+        cmat, s_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (cl, P)
+
+    # ---- intra-chunk (y_diag = att @ x) cotangents
+    datt = jax.lax.dot_general(dy, x, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (cl,cl)
+    dx = jax.lax.dot_general(att, dy, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (cl, P)
+    dcb = datt * decay * dt[None, :]
+    db = jax.lax.dot_general(dcb, cmat, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (cl, N)
+    dc = jax.lax.dot_general(dcb, bmat, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (cl, N)
+    dseg = datt * cb * dt[None, :] * decay   # decay folds exp(seg) and tril
+    dcs = jnp.sum(dseg, axis=1) - jnp.sum(dseg, axis=0)
+    ddt_att = jnp.sum(datt * cb * decay, axis=0)          # (cl,) per column
+
+    # ---- inter-chunk offset (y_off) cotangents
+    dcs = dcs + jnp.sum(dy * y_off, axis=1)
+    dc = dc + ecs[:, None] * jax.lax.dot_general(
+        dy, s_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # ---- state-update (S_out = e^{cs_end} S_in + Σ w_l x_l b_l^T)
+    dSb = jax.lax.dot_general(bmat, ds_out, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (cl, P)
+    dS_x = jax.lax.dot_general(x, ds_out, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (cl, N)
+    dx = dx + w[:, None] * dSb
+    db = db + w[:, None] * dS_x
+    dw = jnp.sum(dS_x * bmat, axis=1)                     # (cl,)
+    ddt_w = dw * jnp.exp(cs[-1] - cs)
+    dcs = dcs - dw * w
+    dcs_end = jnp.sum(dw * w) \
+        + jnp.exp(cs[-1]) * jnp.sum(ds_out * s_in)
+    dcs = dcs.at[-1].add(dcs_end)
+
+    # ---- cumsum transpose + scalar-a partial
+    dda = jnp.cumsum(dcs[::-1])[::-1]                     # Σ_{l>=t} dcs_l
+    ddt = ddt_att + ddt_w + dda * a
+    dap_ref[...] = dap_ref[...] + jnp.sum(dda * dt)[None, None]
+
+    # ---- outputs + carried dS for the previous chunk
+    dx_ref[0, :, 0] = dx
+    ddt_ref[0, :, 0] = ddt
+    dbh_ref[0, :, 0] = db
+    dch_ref[0, :, 0] = dc
+    dinit_ref[0, 0] = jnp.exp(cs[-1]) * ds_out + jax.lax.dot_general(
+        dy * ecs[:, None], cmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def ssd_scan_bwd(x, dt, a, b, c, chunk_states, dy, dfinal, *,
+                 chunk: int = 128, interpret: bool = False):
+    """Reversed-recurrence gradients from the per-chunk carried states.
+
+    Returns (dx, ddt, da, db, dc, dinitial_state) in float32. db/dc are
+    emitted per head (B,S,H,N) and reduced over each b/c group outside
+    the kernel — an input-sized tensor, not a state history.
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    cl = min(chunk, S)
+    nc = pl.cdiv(S, cl)
+
+    rev = lambda ci: nc - 1 - ci
+    outs = pl.pallas_call(
+        functools.partial(_ssd_bwd_kernel, cl=cl, nc=nc, S=S,
+                          mask_tail=(S % cl) != 0),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, rev(ci), h, 0)),
+            pl.BlockSpec((1, cl, 1), lambda bi, h, ci: (bi, rev(ci), h)),
+            pl.BlockSpec((1,), lambda bi, h, ci: (h,)),
+            pl.BlockSpec((1, cl, 1, N),
+                         lambda bi, h, ci: (bi, rev(ci), h * G // H, 0)),
+            pl.BlockSpec((1, cl, 1, N),
+                         lambda bi, h, ci: (bi, rev(ci), h * G // H, 0)),
+            pl.BlockSpec((1, 1, 1, P, N),
+                         lambda bi, h, ci: (bi, h, rev(ci), 0, 0)),
+            pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, rev(ci), h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, cl, 1, P), lambda bi, h, ci: (bi, rev(ci), h, 0)),
+            pl.BlockSpec((1, cl, 1), lambda bi, h, ci: (bi, rev(ci), h)),
+            pl.BlockSpec((1, cl, 1, N), lambda bi, h, ci: (bi, rev(ci), h, 0)),
+            pl.BlockSpec((1, cl, 1, N), lambda bi, h, ci: (bi, rev(ci), h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, ci: (bi, h)),
             pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         interpret=interpret,
-    )(x, dt, a, b, c)
-    return y, state
+    )(x, dt, a, b, c, chunk_states, dy.astype(jnp.float32),
+      dfinal.astype(jnp.float32))
+    dx, ddt, dbh, dch, dap, dinit = outs
+    da = jnp.sum(dap, axis=0)                             # (H,)
+    db = jnp.sum(dbh.reshape(B, S, G, rep, N), axis=3)    # group-reduce
+    dc = jnp.sum(dch.reshape(B, S, G, rep, N), axis=3)
+    return dx, ddt, da, db, dc, dinit
+
+
+# ------------------------------------------------------------ custom VJP --
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def ssd_scan_vjp(x, dt, a, b, c, initial_state, chunk=128, interpret=False):
+    """ssd_scan with the reversed-recurrence Pallas backward (DESIGN.md §9).
+
+    Residual contract: only the inputs (alive anyway) and the per-chunk
+    carried states (nc snapshots) are saved — the backward re-streams the
+    chunks in reverse, so the (S, P, N) state history never lands in HBM
+    in either direction. Also the only *differentiable* kernel path: jax
+    autodiff through the forward pallas_call raises (its JVP rule rejects
+    ``pl.program_id``). ``initial_state`` must be a concrete (B,H,P,N)
+    array (the ops wrapper materializes zeros for callers without one);
+    its cotangent falls out of the dS carry for free."""
+    return ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=interpret,
+                    initial_state=initial_state)
+
+
+def _vjp_fwd(x, dt, a, b, c, initial_state, chunk, interpret):
+    y, final, cstates = ssd_scan(x, dt, a, b, c, chunk=chunk,
+                                 interpret=interpret,
+                                 initial_state=initial_state,
+                                 return_chunk_states=True)
+    return (y, final), (x, dt, a, b, c, cstates)
+
+
+def _vjp_bwd(chunk, interpret, res, g):
+    x, dt, a, b, c, cstates = res
+    dy, dfinal = g
+    dx, ddt, da, db, dc, dinit = ssd_scan_bwd(
+        x, dt, a, b, c, cstates, dy, dfinal, chunk=chunk,
+        interpret=interpret)
+    return (dx.astype(x.dtype), ddt.astype(dt.dtype), da.astype(a.dtype),
+            db.astype(b.dtype), dc.astype(c.dtype), dinit)
+
+
+ssd_scan_vjp.defvjp(_vjp_fwd, _vjp_bwd)

@@ -54,10 +54,12 @@ def make_distill_step(cfg: ArchConfig, mesh, *, n_clients: int, **kw):
     pod-sharded homogeneous client stack (core.dense_llm's production
     cell, re-exported here so launch drivers and the dry-run route every
     jittable step — train / distill / prefill / decode — through one
-    module). Keywords (s_lr, chunked_kl, kl_chunk, distill_kl_mode) are
-    forwarded verbatim — core.dense_llm.make_pod_distill_step owns the
-    defaults. distill_kl_mode="fused" runs the KL loss AND its backward
-    through the Pallas custom-VJP kernel pair (DESIGN.md §9)."""
+    module). Keywords (s_lr, chunked_kl, kl_chunk, distill_kl_mode,
+    kernel_vjp_mode) are forwarded verbatim —
+    core.dense_llm.make_pod_distill_step owns the defaults.
+    distill_kl_mode="fused" runs the KL loss AND its backward through the
+    Pallas custom-VJP kernel pair; kernel_vjp_mode="fused" does the same
+    for the trunk's attention/SSM layers (DESIGN.md §9)."""
     from repro.core import dense_llm as DL
     return DL.make_pod_distill_step(cfg, mesh, n_clients=n_clients, **kw)
 

@@ -116,6 +116,18 @@ def _use_blockwise(sq: int, t: int, bq=None, bk=None) -> bool:
     return sq >= BLOCKWISE_MIN and sq % bq == 0 and t % bk == 0
 
 
+def _static_window(window):
+    """``int(window)`` when the window is a compile-time constant, else
+    None. The Pallas kernel path bakes the window into the kernel body, so
+    a traced window (gemma3's scanned local/global layer pattern) keeps
+    the XLA path."""
+    try:
+        return int(window)
+    except (TypeError, jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return None
+
+
 def gqa_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
               positions: jnp.ndarray, window=0,
               cache: dict | None = None, cache_pos=None):
@@ -135,6 +147,27 @@ def gqa_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
     cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
     k = L.apply_rope(k, cos, sin)
+
+    sw = _static_window(window)
+    if cfg.kernel_vjp_mode != "ref" and cache is None and sw is not None:
+        # Pallas kernel route (scfg.kernel_vjp_mode, DESIGN.md §9):
+        # "fused" differentiates through the streaming custom-VJP pair —
+        # the path DENSE stage-2 distillation takes when the student (or
+        # the generator's teacher ensemble) is an attention LM. Diverges
+        # BEFORE the positions-based mask construction below: the kernel
+        # builds causal/window masks from block indices, under the
+        # contract that positions are contiguous (every cache=None call
+        # site passes arange(S)); traced windows and decode/prefill stay
+        # on the XLA paths.
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+            jnp.moveaxis(v, 1, 2), causal=True, window=sw,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_kv,
+            vjp_mode=cfg.kernel_vjp_mode)
+        out = jnp.moveaxis(out, 1, 2)                    # (B, S, h, hd)
+        return L.linear(p["wo"], out.reshape(B, S, h * hd).astype(x.dtype)), \
+            None
 
     if cache is not None:
         pos = positions[0] if cache_pos is None else cache_pos

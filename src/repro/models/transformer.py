@@ -293,26 +293,42 @@ def forward(params: dict, cfg: ArchConfig, *,
         return jax.checkpoint(f) if use_remat else f
 
     if fam in ("dense", "audio"):
-        windows = jnp.asarray(layer_windows(cfg))
+        # Without a sliding-window pattern every layer is global: keep the
+        # window a compile-time 0 instead of scanning a zeros array, so
+        # the attention layer can take its Pallas kernel route
+        # (models/attention.gqa_apply requires a static window —
+        # cfg.kernel_vjp_mode, DESIGN.md §9). gemma3-style patterns scan
+        # the per-layer window and stay on the XLA path.
+        win_static = not cfg.sliding_window
+        windows = None if win_static else jnp.asarray(layer_windows(cfg))
 
         def body(carry, xs):
             h = carry
             if cache is None:
-                p_l, w = xs
+                if win_static:
+                    p_l, w = xs, 0
+                else:
+                    p_l, w = xs
                 h, _ = _apply_dense_block(p_l, h, cfg, positions, w, None, None)
                 return h, 0
-            p_l, w, c_l = xs
+            if win_static:
+                p_l, c_l = xs
+                w = 0
+            else:
+                p_l, w, c_l = xs
             h, new_c = _apply_dense_block(p_l, h, cfg, positions, w, c_l,
                                           cache_pos)
             return h, new_c
 
         if cache is None:
-            x, _ = _scan_l(maybe_ckpt(body), x,
-                                (params["blocks"], windows))
+            xs_in = params["blocks"] if win_static \
+                else (params["blocks"], windows)
+            x, _ = _scan_l(maybe_ckpt(body), x, xs_in)
             new_cache = None
         else:
-            x, new_layers = _scan_l(body, x, (params["blocks"], windows,
-                                                   cache["layers"]))
+            xs_in = (params["blocks"], cache["layers"]) if win_static \
+                else (params["blocks"], windows, cache["layers"])
+            x, new_layers = _scan_l(body, x, xs_in)
             new_cache = {"layers": new_layers}
 
     elif fam == "moe":

@@ -3,10 +3,13 @@
 Kernels run in interpret mode on CPU (the TPU lowering is exercised by the
 same pallas_call).
 
-The distill_kl custom-VJP suite doubles as CI's ``kernel-grads`` matrix:
-``KERNEL_GRAD_DTYPE`` / ``KERNEL_GRAD_BLOCKS`` (e.g. ``bfloat16`` /
-``4x96``) restrict the parametrization to one matrix cell so each CI job
-runs a focused slice; unset (local runs) the full sweep executes."""
+The custom-VJP suites (distill_kl, flash_attention, ssd_scan — the §9
+kernel pairs) double as CI's ``kernel-grads`` matrix: ``KERNEL_GRAD_DTYPE``
+/ ``KERNEL_GRAD_BLOCKS`` (e.g. ``bfloat16`` / ``4x96``) restrict the
+parametrization to one matrix cell so each CI job runs a focused slice;
+unset (local runs) the full sweep executes. The block-name axis maps to
+per-kernel block geometries (`_ATTN_GRAD_BLOCKS` / `_SSD_GRAD_CHUNKS`) so
+one matrix covers all three pairs."""
 import os
 
 import jax
@@ -235,3 +238,232 @@ def test_ssd_scan_matches_model_chunked_impl():
     y2, s2 = ssd_chunked(x, dt, a, b, c, chunk=16)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3)
+
+
+# ------------------------------------------- flash_attention custom VJP --
+#
+# The streaming backward kernels (kernels/flash_attention.flash_attention_bwd)
+# vs jax.vjp of the materialized reference — CI's kernel-grads matrix runs
+# one (dtype x block) cell per job via the env vars above. The block-name
+# axis maps to attention tile shapes here (divisible AND ragged-vs-32
+# geometries per cell).
+
+_ATTN_GRAD_BLOCKS = {"8x128": (32, 32), "4x96": (32, 16)}
+
+# (B, Hq, Hkv, Sq, Sk, window): GQA ratios, ragged tails, cross Sq != Sk,
+# and a window shorter than the k-block (fully-masked dead blocks)
+_ATTN_GRAD_SHAPES = [
+    (1, 4, 2, 64, 64, 0),
+    (1, 2, 2, 48, 48, 0),        # ragged vs 32-wide blocks
+    (1, 4, 1, 40, 72, 16),       # 4:1 GQA + ragged + decode-style cross
+    (2, 2, 2, 64, 64, 8),        # window < block: dead k-blocks
+]
+
+
+def _attn_vjp(q, k, v, g, win, bq, bk):
+    f = lambda a, b, c: ops.flash_attention(a, b, c, window=win, block_q=bq,
+                                            block_k=bk, vjp_mode="fused")
+    out, pull = jax.vjp(f, q, k, v)
+    return out, pull(g)
+
+
+@pytest.mark.parametrize("dtype_name,block_name", _grad_matrix())
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,win", _ATTN_GRAD_SHAPES)
+def test_flash_attention_vjp_matches_ref_grads(dtype_name, block_name,
+                                               B, Hq, Hkv, Sq, Sk, win):
+    dtype = _GRAD_DTYPES[dtype_name]
+    bq, bk = _ATTN_GRAD_BLOCKS[block_name]
+    D = 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D), dtype)
+    g = jax.random.normal(ks[3], (B, Hq, Sq, D), dtype)  # non-uniform cotangent
+    out, grads = _attn_vjp(q, k, v, g, win, bq, bk)
+    want = ref.attention(q, k, v, window=win)
+    grads_r = ref.attention_grads(q, k, v, g, window=win)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+    for got, ref_g in zip(grads, grads_r):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref_g, np.float32), atol=tol)
+
+
+def test_flash_attention_ragged_tails_no_longer_crash():
+    """Regression: Sq/Sk not a block multiple used to hit the hard
+    ``Sq % bq == 0 and Sk % bk == 0`` assert; now the tail blocks are
+    masked in-kernel and match the oracle."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 40, 16))
+    k = jax.random.normal(ks[1], (1, 2, 40, 16))
+    v = jax.random.normal(ks[2], (1, 2, 40, 16))
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, k, v)), atol=1e-5)
+
+
+def test_flash_attention_fully_masked_kblock_regression():
+    """Regression for the dead-block bug: a k-block with every key masked
+    used to add exp(NEG_INF - NEG_INF) = 1 per lane into l while
+    m == NEG_INF. In the pure forward the inflation washed out of o once
+    a live block arrived (alpha = exp(NEG_INF - m_real) underflows to 0),
+    but it corrupted the *persisted* (m, l) statistic — the residual the
+    streaming backward folds into lse and divides its recomputed p by —
+    for any row with NO live key at all. The discriminating probe is
+    therefore the stats: lse must be the exact live-mass logsumexp, and
+    exactly NEG_INF (zero mass, provably zero backward contribution) for
+    never-live rows; the unmasked formulation yields
+    NEG_INF + log(n_dead_lanes) there instead."""
+    from repro.kernels.flash_attention import NEG_INF, flash_attention
+    ks = jax.random.split(KEY, 3)
+    # (a) windowed geometry with dead blocks for late rows: forward and
+    # stats must match the materialized oracle
+    S, win, bk = 96, 8, 32
+    q = jax.random.normal(ks[0], (1, 2, S, 16))
+    k = jax.random.normal(ks[1], (1, 2, S, 16))
+    v = jax.random.normal(ks[2], (1, 2, S, 16))
+    out, _, lse = flash_attention(q, k, v, window=win, block_q=32,
+                                  block_k=bk, interpret=True,
+                                  return_stats=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, k, v,
+                                                        window=win)),
+                               atol=1e-5)
+    scores = np.einsum("bhsd,bhtd->bhst", np.asarray(q),
+                       np.asarray(k)) / 4.0
+    pos = np.arange(S)
+    live = (pos[None, :] <= pos[:, None]) & (pos[:, None] - pos[None, :] < win)
+    masked = np.where(live[None, None], scores, -np.inf)
+    want_lse = np.log(np.sum(np.exp(masked), axis=-1))
+    np.testing.assert_allclose(np.asarray(lse).reshape(1, 2, S), want_lse,
+                               atol=1e-4)
+    # (b) never-live rows (causal with Sq > Sk: q_pos < 0): l must be
+    # EXACTLY zero mass -> lse pinned to NEG_INF, output exactly 0
+    Sq, Sk = 8, 4
+    q2 = jax.random.normal(ks[0], (1, 1, Sq, 16))
+    k2 = jax.random.normal(ks[1], (1, 1, Sk, 16))
+    v2 = jax.random.normal(ks[2], (1, 1, Sk, 16))
+    out2, _, lse2 = flash_attention(q2, k2, v2, block_q=4, block_k=4,
+                                    interpret=True, return_stats=True)
+    dead = np.asarray(lse2).reshape(Sq)[:Sq - Sk]
+    np.testing.assert_array_equal(dead, np.full(Sq - Sk, NEG_INF))
+    assert float(jnp.max(jnp.abs(out2[:, :, :Sq - Sk]))) == 0.0
+
+
+# -------------------------------------------------- ssd_scan custom VJP --
+#
+# The reversed-recurrence backward kernel (kernels/ssd_scan.ssd_scan_bwd)
+# vs jax.vjp of the sequential reference, from per-chunk carried-state
+# residuals. Same CI matrix; the block-name axis maps to chunk lengths
+# (ragged and divisible cells).
+
+_SSD_GRAD_CHUNKS = {"8x128": 32, "4x96": 16}
+
+# (B, S, H, P, G, N, nonzero initial state)
+_SSD_GRAD_SHAPES = [
+    (1, 64, 4, 16, 2, 16, False),
+    (1, 40, 2, 8, 1, 8, True),    # ragged tail chunk + state handoff
+    (2, 48, 4, 16, 4, 8, True),   # G == H (rep 1) + ragged for cl=32
+]
+
+
+def _ssd_inputs(B, S, H, P, G, N, dtype, with_init):
+    ks = jax.random.split(KEY, 8)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = (jax.random.normal(ks[3], (B, S, G, N)) * 0.3).astype(dtype)
+    c = (jax.random.normal(ks[4], (B, S, G, N)) * 0.3).astype(dtype)
+    s0 = (jax.random.normal(ks[5], (B, H, P, N)) * 0.5 if with_init
+          else jnp.zeros((B, H, P, N), jnp.float32))
+    gy = jax.random.normal(ks[6], (B, S, H, P))
+    gs = jax.random.normal(ks[7], (B, H, P, N)) * 0.1
+    return x, dt, a, b, c, s0, gy, gs
+
+
+@pytest.mark.parametrize("dtype_name,block_name", _grad_matrix())
+@pytest.mark.parametrize("B,S,H,P,G,N,init", _SSD_GRAD_SHAPES)
+def test_ssd_scan_vjp_matches_ref_grads(dtype_name, block_name,
+                                        B, S, H, P, G, N, init):
+    dtype = _GRAD_DTYPES[dtype_name]
+    cl = _SSD_GRAD_CHUNKS[block_name]
+    x, dt, a, b, c, s0, gy, gs = _ssd_inputs(B, S, H, P, G, N, dtype, init)
+    f = lambda *ar: ops.ssd_scan(*ar, chunk=cl, vjp_mode="fused")
+    (y, st), pull = jax.vjp(f, x, dt, a, b, c, s0)
+    yr, st_r = ref.ssd(x, dt, a, b, c, initial_state=s0)
+    # bf16 grads additionally carry the output-cast quantization, hence
+    # the relative term (both sides round, but at different points)
+    tol, rtol = (1e-4, 0) if dtype == jnp.float32 else (5e-2, 2e-2)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol,
+                               rtol=rtol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), atol=tol,
+                               rtol=rtol)
+    grads = pull((gy.astype(y.dtype), gs))
+    grads_r = ref.ssd_grads(x, dt, a, b, c, s0, gy, gs)
+    for got, ref_g in zip(grads, grads_r):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref_g, np.float32), atol=tol,
+                                   rtol=rtol)
+
+
+def test_ssd_scan_ragged_tail_no_longer_crashes():
+    """Regression: S not a chunk multiple used to hit the hard
+    ``S % cl == 0`` assert; the masked tail chunk must contribute zero to
+    the carried state (dt = 0 on masked lanes)."""
+    x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 40, 2, 8, 1, 8,
+                                          jnp.float32, False)
+    y, st = ops.ssd_scan(x, dt, a, b, c, chunk=32)
+    yr, st_r = ref.ssd(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), atol=2e-3)
+
+
+def test_ssd_scan_initial_state_regression():
+    """Regression for the dropped-state bug: the kernel zeroed its state
+    carry unconditionally, so a nonzero initial_state (prefill→decode
+    handoff) silently fell back to a cold start while the ref.ssd oracle
+    honored it."""
+    x, dt, a, b, c, s0, _, _ = _ssd_inputs(1, 64, 2, 8, 1, 8,
+                                           jnp.float32, True)
+    y, st = ops.ssd_scan(x, dt, a, b, c, s0, chunk=16)
+    yr, st_r = ref.ssd(x, dt, a, b, c, initial_state=s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), atol=2e-3)
+    # a cold start must now DISAGREE (the old kernel returned this)
+    y0, _ = ops.ssd_scan(x, dt, a, b, c, chunk=16)
+    assert float(jnp.max(jnp.abs(y0 - y))) > 1e-3
+
+
+def test_ssd_scan_prefill_decode_handoff():
+    """Split a sequence at a non-chunk boundary and thread the carried
+    state: kernel(first) + kernel(rest, initial_state=carried) must equal
+    one full-sequence kernel pass."""
+    x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 56, 2, 8, 2, 8,
+                                          jnp.float32, False)
+    cut = 24
+    y_full, st_full = ops.ssd_scan(x, dt, a, b, c, chunk=16)
+    y1, st1 = ops.ssd_scan(x[:, :cut], dt[:, :cut], a, b[:, :cut],
+                           c[:, :cut], chunk=16)
+    y2, st2 = ops.ssd_scan(x[:, cut:], dt[:, cut:], a, b[:, cut:],
+                           c[:, cut:], st1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=2e-3)
+
+
+def test_kernel_vjp_mode_ref_and_unknown():
+    """"ref" routes to the oracles; unknown modes fail fast."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    out = ops.flash_attention(q, q, q, vjp_mode="ref")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, q, q)), atol=0)
+    with pytest.raises(ValueError, match="unknown kernel_vjp mode"):
+        ops.flash_attention(q, q, q, vjp_mode="pallas")
+    x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 32, 2, 8, 1, 8,
+                                          jnp.float32, False)
+    with pytest.raises(ValueError, match="unknown kernel_vjp mode"):
+        ops.ssd_scan(x, dt, a, b, c, vjp_mode="nope")
