@@ -86,7 +86,11 @@ def get_data(scfg, seed=0):
 
 def get_federation(scfg, seed=0):
     k = (scfg.n_clients, scfg.alpha, scfg.client_kinds, scfg.local_epochs,
-         scfg.use_ldam, scfg.width, scfg.num_classes, scfg.image_size, seed)
+         scfg.use_ldam, scfg.width, scfg.num_classes, scfg.image_size, seed,
+         # fault/admission knobs change who survives the upload boundary
+         getattr(scfg, "fault_plan", ()), getattr(scfg, "dropout_frac", 0.0),
+         getattr(scfg, "fault_seed", 0), getattr(scfg, "upload_policy", ""),
+         getattr(scfg, "quorum", 0.5), getattr(scfg, "norm_screen", 0.0))
     if k not in _FED_CACHE:
         data = get_data(scfg, seed)
         ledger = CommLedger()
@@ -143,7 +147,7 @@ RECORDS: list[dict] = []
 def emit(name: str, seconds: float, derived: str):
     """CSV contract: name,us_per_call,derived. Every record is also
     collected in RECORDS so run.py --json can write the machine-readable
-    trajectory file (BENCH_PR4.json)."""
+    trajectory file (BENCH_PR6.json)."""
     RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
                     "derived": derived})
     print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
@@ -157,7 +161,7 @@ def _series_key(name: str) -> str:
     import re
     head, _, tail = name.rpartition("/")
     return head if head and re.fullmatch(
-        r"(m|alpha|rounds|hetero)[0-9.]+", tail) else name
+        r"(m|alpha|rounds|hetero|frac)[0-9.]+", tail) else name
 
 
 def write_json(path: str) -> None:

@@ -17,10 +17,12 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   E   ensemble forward looped vs grouped-vmap; epochs/sec    [§Perf]
   C   client local training looped vs grouped engine         [§Perf]
   S   client-axis mesh sharding vs single-device grouped     [§Perf]
-  R   roofline summary from dry-run artifacts                [§Roofline]
+  R   robustness: accuracy + clients/sec vs dropout_frac,
+      quarantine admission, checkpoint/resume overhead       [§Robust]
+  ROOF roofline summary from dry-run artifacts               [§Roofline]
 
 ``--json PATH`` additionally writes every emitted record plus per-table
-medians as one machine-readable document (the BENCH_PR5.json perf
+medians as one machine-readable document (the BENCH_PR6.json perf
 trajectory artifact; scripts/tier1.sh writes it, CI uploads it and
 benchmarks/check_regression.py gates PRs on the per-series medians).
 """
@@ -626,11 +628,80 @@ def r_roofline(full: bool):
               f"useful_ratio={rec.get('useful_flops_ratio', 0.0):.3f}"))
 
 
+def r_robustness(full: bool):
+    """Fault-tolerant one-shot round (DESIGN.md §10): DENSE accuracy and
+    local-phase throughput as the per-round client dropout fraction
+    grows under quarantine admission, plus the stage-2 checkpointing
+    overhead and a kill+resume round trip."""
+    import shutil
+    import tempfile
+
+    from repro.core.dense import train_dense_server
+    from repro.data import make_classification_data
+    from repro.fl import build_federation
+
+    base = dataclasses.replace(
+        base_cfg(full), n_clients=5, client_kinds=("cnn1",) * 5,
+        quorum=0.2, fault_seed=1)
+    fracs = (0.0, 0.1, 0.3, 0.5) if full else (0.0, 0.3, 0.5)
+    for frac in fracs:
+        scfg = dataclasses.replace(base, dropout_frac=frac)
+        data, clients, _ = get_federation(scfg)
+        # time the local phase + fault/admission boundary fresh (the
+        # cached build above only warmed data + compilation)
+        t0 = time.time()
+        fresh, _ = build_federation(jax.random.PRNGKey(0), scfg, data,
+                                    seed=0)
+        t_build = time.time() - t0
+        m = scfg.n_clients
+        surv = int(getattr(fresh, "survivor_mask",
+                           np.ones(m, bool)).sum())
+        acc, dt = run_method("dense", scfg)
+        emit(f"r/local_train/frac{frac}", t_build / m,
+             f"clients_per_sec={m / t_build:.2f};survivors={surv}/{m}")
+        emit(f"r/dense/frac{frac}", dt,
+             f"acc={acc:.4f};survivors={surv}/{m}")
+
+    # checkpointing overhead + kill/resume round trip (quarantine-free)
+    data, clients, _ = get_federation(base)
+    key = jax.random.PRNGKey(100)
+    t0 = time.time()
+    train_dense_server(key, clients, base)
+    t_plain = time.time() - t0
+    ckdir = tempfile.mkdtemp(prefix="dense_bench_ck_")
+    try:
+        every = max(2, base.epochs // 5)
+        scfg_ck = dataclasses.replace(
+            base, checkpoint_every=every,
+            checkpoint_path=os.path.join(ckdir, "ck"))
+        t0 = time.time()
+        train_dense_server(key, clients, scfg_ck)
+        t_ck = time.time() - t0
+        emit("r/checkpoint_overhead", t_ck,
+             (f"every={every};overhead={t_ck / t_plain:.3f}x;"
+              f"plain_s={t_plain:.2f}"))
+        # kill at ~60% of the run, resume from the last checkpoint
+        shutil.rmtree(ckdir)
+        os.makedirs(ckdir)
+        stop = (base.epochs * 3) // 5
+        t0 = time.time()
+        train_dense_server(key, clients, scfg_ck,
+                           _stop_after_epoch=stop)
+        train_dense_server(key, clients, scfg_ck)
+        t_resume = time.time() - t0
+        emit("r/kill_resume", t_resume,
+             (f"stop_epoch={stop};roundtrip_vs_plain="
+              f"{t_resume / t_plain:.3f}x"))
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
           "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
           "attn": attn_flash, "ssd": ssd_table, "e": e_ensemble,
-          "c": c_client_training, "s": s_sharding, "r": r_roofline}
+          "c": c_client_training, "s": s_sharding, "r": r_robustness,
+          "roof": r_roofline}
 
 
 def main() -> None:
@@ -642,7 +713,7 @@ def main() -> None:
                     help="comma list of tables, e.g. t1,t6,k")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records + per-table medians as JSON "
-                         "(the BENCH_PR5.json trajectory artifact)")
+                         "(the BENCH_PR6.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)

@@ -1,20 +1,27 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf tables in one command:
-#   ./scripts/tier1.sh [--fast] [extra pytest args]
+#   ./scripts/tier1.sh [--fast|--chaos] [extra pytest args]
 #
 # Default: the ROADMAP tier-1 test command, then the kernel (k),
 # custom-VJP pair (kl, attn, ssd), ensemble/epoch-driver (e),
-# grouped-client-training (c) and client-axis sharding (s) benchmark
-# tables — printed as CSV and written as the machine-readable
-# BENCH_PR5.json trajectory artifact (benchmarks/run.py --json; CI
-# uploads it and benchmarks/check_regression.py gates PRs against the
-# committed previous-PR baseline).
+# grouped-client-training (c), client-axis sharding (s) and
+# robustness (r) benchmark tables — printed as CSV and written as the
+# machine-readable BENCH_PR6.json trajectory artifact
+# (benchmarks/run.py --json; CI uploads it and
+# benchmarks/check_regression.py gates PRs against the committed
+# previous-PR baseline).
 #
 # --fast: tight-time-budget gate — skips tests marked `slow` (the long
 # grouped-vs-python equivalence sweeps, see tests/conftest.py) and the
 # benchmark tables. NOTE: because the tables are skipped, --fast does
-# NOT emit BENCH_PR5.json; CI's bench job calls benchmarks/run.py --json
+# NOT emit BENCH_PR6.json; CI's bench job calls benchmarks/run.py --json
 # directly instead.
+#
+# --chaos: the fault-injection matrix (DESIGN.md §10) — reruns the
+# env-parameterized tests of tests/test_faults.py for every fault kind x
+# admission policy under 8 forced host devices, so the quarantine masks
+# are exercised through the genuinely-sharded psum teacher. Mirrors
+# CI's `chaos` job (one matrix cell per job there; the whole grid here).
 #
 # Exit code: nonzero iff any step fails. `set -e` aborts on the first
 # failing command with its code, and the explicit final `exit` makes the
@@ -30,7 +37,22 @@ if [[ "${1:-}" == "--fast" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--chaos" ]]; then
+  shift
+  for kind in drop delay nan inf noise signflip; do
+    for policy in quarantine strict; do
+      echo "=== chaos: CHAOS_KIND=$kind CHAOS_POLICY=$policy ==="
+      CHAOS_KIND=$kind CHAOS_POLICY=$policy \
+        XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -x -q tests/test_faults.py \
+          -k "matrix or removal or sharded or strict_policy" "$@"
+    done
+  done
+  exit 0
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python benchmarks/run.py --only k,kl,attn,ssd,e,c,s --json BENCH_PR5.json
+  python benchmarks/run.py --only k,kl,attn,ssd,e,c,s,r --json BENCH_PR6.json
 exit 0

@@ -1,3 +1,5 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint, load_meta
+from repro.checkpoint.io import (checkpoint_exists, load_meta,
+                                 restore_checkpoint, save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "load_meta"]
+__all__ = ["checkpoint_exists", "save_checkpoint", "restore_checkpoint",
+           "load_meta"]

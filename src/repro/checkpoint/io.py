@@ -1,4 +1,11 @@
-"""npz-based pytree checkpointing with path-flattened keys + JSON metadata."""
+"""npz-based pytree checkpointing with path-flattened keys + JSON metadata.
+
+Used by the DENSE server loop's periodic checkpoint/resume
+(core/dense.train_dense_server, ``scfg.checkpoint_every`` /
+``scfg.checkpoint_path``): a killed run restores the full server state
+(generator/student params, optimizer states, epoch index, base key) and
+replays the remaining epochs bit-identically (tests/test_checkpoint.py).
+"""
 from __future__ import annotations
 
 import json
@@ -24,6 +31,10 @@ def _seg(p):
     return str(p)
 
 
+def checkpoint_exists(path: str) -> bool:
+    return os.path.exists(path if path.endswith(".npz") else path + ".npz")
+
+
 def save_checkpoint(path: str, tree, meta: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
@@ -34,15 +45,27 @@ def save_checkpoint(path: str, tree, meta: dict | None = None) -> None:
 
 
 def restore_checkpoint(path: str, like):
-    """Restore into the structure of ``like`` (same treedef)."""
-    f = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (same treedef).
+
+    Raises ``ValueError`` (not a bare assert — must survive ``python -O``)
+    when the checkpoint's key set does not match ``like``'s flattened
+    paths. Restored leaves are cast to the corresponding ``like`` leaf's
+    dtype, so optimizer step counters, PRNG keys and mixed-precision
+    params come back exactly as the run left them regardless of how
+    ``np.savez`` round-tripped the storage dtype.
+    """
+    fname = path if path.endswith(".npz") else path + ".npz"
     flat_like = _flatten(like)
-    assert set(f.files) == set(flat_like), (
-        f"checkpoint keys mismatch: {set(f.files) ^ set(flat_like)}")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     keys = ["/".join(_seg(p) for p in path)
             for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
-    new_leaves = [f[k] for k in keys]
+    with np.load(fname) as f:          # context manager: no leaked fd
+        if set(f.files) != set(flat_like):
+            raise ValueError(
+                f"checkpoint keys mismatch vs `like` treedef: "
+                f"{sorted(set(f.files) ^ set(flat_like))}")
+        new_leaves = [np.asarray(f[k]).astype(np.asarray(l).dtype)
+                      for k, l in zip(keys, leaves_like)]
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 

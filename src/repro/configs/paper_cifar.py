@@ -71,6 +71,33 @@ class DenseExperimentConfig:
                                     # passes; kernels/distill_kl,
                                     # DESIGN.md §9. interpret-mode on
                                     # CPU hosts, Mosaic on TPU).
+
+    # fault tolerance (DESIGN.md §10) — injection knobs (fl/faults.py):
+    fault_plan: tuple = ()          # explicit per-client faults, entries
+                                    # are Fault or (client, kind[, scale
+                                    # [, round]]) tuples; kinds: drop,
+                                    # delay, nan, inf, noise, signflip
+    dropout_frac: float = 0.0       # fraction of clients whose upload is
+                                    # dropped per round (seeded choice)
+    fault_seed: int = 0             # seeds dropout choice + corruption
+
+    # — admission/defense knobs (fl.protocol.admit_uploads):
+    upload_policy: str = "quarantine"  # failed screen: "quarantine"
+                                    # (survivor-masked exclusion) or
+                                    # "strict" (raise UploadError)
+    quorum: float = 0.5             # min surviving fraction; below it
+                                    # the round aborts with QuorumError
+    norm_screen: float = 0.0        # param-norm outlier screen in MADs
+                                    # (0 = off; cohorts >= 5 only)
+
+    # — stage-2 self-healing (core/dense.py):
+    nan_policy: str = "raise"       # non-finite server loss: "raise",
+                                    # "skip" (compiled no-op step) or
+                                    # "rollback" (last good snapshot)
+    checkpoint_every: int = 0       # server-state checkpoint period in
+                                    # epochs (0 = off)
+    checkpoint_path: str = ""       # npz path stem (checkpoint/io.py);
+                                    # restored on entry if present
     seed: int = 0
 
 

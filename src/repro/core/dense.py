@@ -99,9 +99,18 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     # route through it, so the fused dL/dt stream is reused in stage 1
     kl_mode = getattr(scfg, "distill_kl_mode", "ref")
     LS.check_mode(kl_mode)
+    # nan_policy="skip" compiles an isfinite guard into BOTH steps: a
+    # non-finite loss (or grad) step becomes a no-op update via
+    # jnp.where over the param/opt-state trees. Any other policy
+    # compiles the guard out entirely — the healthy path is unchanged.
+    nan_guard = getattr(scfg, "nan_policy", "raise") == "skip"
     g_opt = optim.adam(scfg.g_lr)
     s_opt = optim.sgd(scfg.s_lr, momentum=scfg.s_momentum)
     img = scfg.image_size
+    # stack_grouped statically slices quarantined clients out when the
+    # federation carries admission masks (fl.protocol.admit_uploads):
+    # the teacher is built from survivors only, bit-identically to a
+    # federation without the quarantined clients
     gspecs, gparams = stack_grouped(clients)
     if mesh is not None:
         from repro.fl.sharding import put_grouped
@@ -127,6 +136,12 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
 
         (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(gen_p)
         new_p, new_state = g_opt.update(grads, g_state, gen_p)
+        if nan_guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(optim.global_norm(grads))
+            new_p = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                 new_p, gen_p)
+            new_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                     new_state, g_state)
         return new_p, new_state, loss, parts
 
     @jax.jit
@@ -143,6 +158,14 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
         (loss, stats_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(stu_p)
         new_p, new_state = s_opt.update(grads, s_state, stu_p)
         new_p = merge_bn_stats(new_p, stats_p)
+        if nan_guard:
+            # guards the merged BN stats too: a non-finite synthetic
+            # batch would otherwise poison the running mean/var
+            ok = jnp.isfinite(loss) & jnp.isfinite(optim.global_norm(grads))
+            new_p = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                 new_p, stu_p)
+            new_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                     new_state, s_state)
         return new_p, new_state, loss
 
     t_g = scfg.t_g
@@ -203,14 +226,21 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
             epochs_step)
 
 
-def _chunk_bounds(epochs: int, chunk: int, eval_every: int):
-    """Chunk [0, epochs) into scan programs of <= chunk epochs, never
-    crossing an eval boundary (eval_every=0 disables boundaries)."""
-    bounds, e = [], 0
+def _chunk_bounds(epochs: int, chunk: int, eval_every: int,
+                  ckpt_every: int = 0, start: int = 0):
+    """Chunk [start, epochs) into scan programs of <= chunk epochs, never
+    crossing an eval or checkpoint boundary (0 disables either kind).
+    ``start`` > 0 resumes mid-schedule (checkpoint restore): the bounds
+    after a checkpoint boundary are identical whether the run started at
+    0 or resumed at that boundary, which is what makes fused-mode resume
+    replay the same chunk programs."""
+    bounds, e = [], start
     while e < epochs:
         nxt = min(e + chunk, epochs)
         if eval_every:
             nxt = min(nxt, ((e // eval_every) + 1) * eval_every)
+        if ckpt_every:
+            nxt = min(nxt, ((e // ckpt_every) + 1) * ckpt_every)
         bounds.append((e, nxt))
         e = nxt
     return bounds
@@ -221,7 +251,8 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
                        eval_fn: Callable | None = None,
                        use_bn: bool = True, use_div: bool = True,
                        eval_every: int = 0,
-                       student_params: dict | None = None):
+                       student_params: dict | None = None,
+                       _poison_epochs=(), _stop_after_epoch: int = 0):
     """Run Algorithm 1. Returns (student_params, gen_params, history).
 
     scfg.loop_mode selects the epoch driver ("python" per-step jit —
@@ -233,10 +264,42 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
     scfg.distill_kl_mode selects the stage-2 KL implementation ("ref"
     jnp autodiff or "fused" Pallas custom-VJP pair, DESIGN.md §9) —
     also a pure implementation choice, same math.
+
+    Self-healing (DESIGN.md §10). ``scfg.nan_policy`` decides what a
+    non-finite generator/student loss means:
+
+      * ``"raise"`` (default) — FloatingPointError at the first bad
+        epoch (host-side check of the fetched metrics).
+      * ``"skip"`` — the bad *step* is a compiled no-op (isfinite guard
+        inside the jitted steps, make_dense_steps); training continues.
+      * ``"rollback"`` — restore the last good host snapshot: epoch
+        granularity under the python driver, chunk granularity under the
+        fused driver (the whole bad chunk's epochs are dropped; carries
+        are copied before the donated scan).
+
+    Checkpoint/resume. With ``scfg.checkpoint_every`` > 0 and
+    ``scfg.checkpoint_path`` set, the FULL server state (gen/student
+    params, both optimizer states, the base epoch-key and the epoch
+    index) is written through checkpoint/io.py every N epochs, and an
+    existing checkpoint at that path is restored on entry. Both drivers
+    re-derive ``epoch_keys`` from the restored base key, so a killed run
+    resumes bit-identically (tests/test_checkpoint.py); history covers
+    only post-resume epochs.
+
+    ``_poison_epochs`` / ``_stop_after_epoch`` are test-only fault hooks:
+    NaN-fill the listed epochs' latent batch (python driver), and return
+    early after N epochs to simulate a mid-run kill.
     """
+    from repro.checkpoint import (checkpoint_exists, restore_checkpoint,
+                                  save_checkpoint)
+
     student_spec = student_spec or CNNSpec(
         kind=scfg.global_kind, num_classes=scfg.num_classes,
         in_ch=scfg.in_ch, width=scfg.width, image_size=scfg.image_size)
+    nan_policy = getattr(scfg, "nan_policy", "raise")
+    if nan_policy not in ("raise", "skip", "rollback"):
+        raise ValueError(f"unknown nan_policy {nan_policy!r} "
+                         "(expected 'raise', 'skip' or 'rollback')")
     k_gen, k_stu, key = jax.random.split(key, 3)
     gen_p = G.img_generator_init(k_gen, nz=scfg.nz, img_size=scfg.image_size,
                                  out_ch=scfg.in_ch)
@@ -249,12 +312,35 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
     g_state = g_opt.init(gen_p)
     s_state = s_opt.init(stu_p)
 
+    ck_every = int(getattr(scfg, "checkpoint_every", 0) or 0)
+    ck_path = getattr(scfg, "checkpoint_path", "") or ""
+    ckpt_on = bool(ck_every and ck_path)
+    start_epoch = 0
+    if ckpt_on and checkpoint_exists(ck_path):
+        like = {"gen_p": gen_p, "g_state": g_state, "stu_p": stu_p,
+                "s_state": s_state, "key": key,
+                "epoch": np.zeros((), np.int64)}
+        st = restore_checkpoint(ck_path, like)
+        gen_p, g_state = st["gen_p"], st["g_state"]
+        stu_p, s_state = st["stu_p"], st["s_state"]
+        key, start_epoch = st["key"], int(st["epoch"])
+
+    def save_ckpt(gp, gs, sp, ss, epoch_done):
+        save_checkpoint(ck_path,
+                        {"gen_p": gp, "g_state": gs, "stu_p": sp,
+                         "s_state": ss, "key": key,
+                         "epoch": np.asarray(epoch_done, np.int64)},
+                        meta={"epoch": int(epoch_done),
+                              "epochs": int(scfg.epochs)})
+
     hist = DenseHistory()
     s_steps = getattr(scfg, "s_steps", 1)
     loop_mode = getattr(scfg, "loop_mode", "python")
     loop_chunk = max(1, int(getattr(scfg, "loop_chunk", 8)))
+    poison = frozenset(_poison_epochs or ())
     # both drivers consume the SAME per-epoch key stream so they are
-    # interchangeable (and testable against each other)
+    # interchangeable (and testable against each other); the stream
+    # depends only on the (restored) base key, never on start_epoch
     epoch_keys = jax.random.split(key, scfg.epochs)
 
     def maybe_eval(epoch_done):
@@ -262,8 +348,23 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
                 epoch_done % eval_every == 0:
             hist.acc.append((epoch_done, eval_fn(stu_p, student_spec)))
 
+    def check_finite(gl, dl, where):
+        bad = not (np.all(np.isfinite(gl)) and np.all(np.isfinite(dl)))
+        if bad and nan_policy == "raise":
+            raise FloatingPointError(
+                f"non-finite loss at {where} (gen={gl}, dis={dl}); "
+                "set scfg.nan_policy='skip' or 'rollback' to self-heal")
+        return bad
+
     if loop_mode == "fused":
-        for lo, hi in _chunk_bounds(scfg.epochs, loop_chunk, eval_every):
+        snap = None
+        for lo, hi in _chunk_bounds(scfg.epochs, loop_chunk, eval_every,
+                                    ck_every if ckpt_on else 0,
+                                    start_epoch):
+            if nan_policy == "rollback":
+                # epochs_step donates its carries — snapshot copies
+                snap = jax.tree.map(jnp.copy,
+                                    (gen_p, g_state, stu_p, s_state))
             gen_p, g_state, stu_p, s_state, metrics = epochs_step(
                 gen_p, g_state, stu_p, s_state, gparams, epoch_keys[lo:hi])
             m = jax.device_get(metrics)      # ONE host sync per chunk
@@ -272,13 +373,24 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
             hist.gen_parts.extend(
                 {k: float(v[i]) for k, v in m["parts"].items()}
                 for i in range(hi - lo))
+            bad = check_finite(m["gen_loss"], m["dis_loss"],
+                               f"epochs [{lo}, {hi})")
+            if bad and nan_policy == "rollback":
+                gen_p, g_state, stu_p, s_state = snap
             maybe_eval(hi)
+            if _stop_after_epoch and hi >= _stop_after_epoch:
+                return stu_p, gen_p, hist    # simulated kill beats save
+            if ckpt_on and hi % ck_every == 0:
+                save_ckpt(gen_p, g_state, stu_p, s_state, hi)
     elif loop_mode == "python":
         b, nz = scfg.synth_batch, scfg.nz
-        for epoch in range(scfg.epochs):
+        snap = (gen_p, g_state, stu_p, s_state)
+        for epoch in range(start_epoch, scfg.epochs):
             # identical derivation to _epoch_body
             kz, ky, ks = jax.random.split(epoch_keys[epoch], 3)
             z = jax.random.normal(kz, (b, nz))
+            if epoch in poison:
+                z = jnp.full_like(z, jnp.nan)
             y = jax.random.randint(ky, (b,), 0, scfg.num_classes)
             for _ in range(scfg.t_g):
                 gen_p, g_state, gl, parts = gen_step(gen_p, g_state, stu_p,
@@ -293,7 +405,18 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
             hist.gen_loss.append(float(gl))
             hist.gen_parts.append({k: float(v) for k, v in parts.items()})
             hist.dis_loss.append(float(dl))
+            bad = check_finite(hist.gen_loss[-1], hist.dis_loss[-1],
+                               f"epoch {epoch}")
+            if nan_policy == "rollback":
+                if bad:
+                    gen_p, g_state, stu_p, s_state = snap
+                else:
+                    snap = (gen_p, g_state, stu_p, s_state)
             maybe_eval(epoch + 1)
+            if _stop_after_epoch and epoch + 1 >= _stop_after_epoch:
+                return stu_p, gen_p, hist    # simulated kill beats save
+            if ckpt_on and (epoch + 1) % ck_every == 0:
+                save_ckpt(gen_p, g_state, stu_p, s_state, epoch + 1)
     else:
         raise ValueError(f"unknown loop_mode {loop_mode!r} "
                          "(expected 'python' or 'fused')")

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import numpy as np
+
 from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_apply_grouped,
                               is_conv_stack)
 
@@ -92,7 +94,7 @@ def group_clients(clients: Sequence[Client]):
     return [(spec, tuple(idx)) for spec, idx in groups.items()]
 
 
-def stack_grouped(clients: Sequence[Client]):
+def stack_grouped(clients: Sequence[Client], *, apply_masks: bool = True):
     """Build the grouped-ensemble representation.
 
     -> (gspecs, gparams) where gspecs is the *static* part — a tuple of
@@ -107,19 +109,81 @@ def stack_grouped(clients: Sequence[Client]):
     prebuilt (gspecs, gparams) is returned as-is, so params trained on
     the stacked client axis flow into the ensemble without an
     unstack/restack round trip through host memory.
+
+    A federation that went through upload admission
+    (fl.protocol.admit_uploads) carries ``group_masks``: with
+    ``apply_masks=True`` (default) quarantined clients are statically
+    sliced out here (``apply_group_masks``), so EVERY grouped consumer —
+    the DENSE teacher, the baselines, the sharded psum path — sees
+    exactly the representation a federation built without those clients
+    would produce. ``apply_masks=False`` returns the raw full-width
+    stack (quarantined slots zero-filled).
     """
+    masks = getattr(clients, "group_masks", None) if apply_masks else None
     pre = getattr(clients, "grouped", None)
     if pre is not None:
-        return pre
-    gspecs, gparams = [], []
-    for spec, idx in group_clients(clients):
-        gspecs.append((spec, len(idx)))
-        if len(idx) == 1:
-            gparams.append(clients[idx[0]].params)
-        else:
-            gparams.append(jax.tree.map(lambda *xs: jnp.stack(xs),
-                                        *[clients[i].params for i in idx]))
+        gspecs, gparams = pre
+    else:
+        gspecs, gparams = [], []
+        for spec, idx in group_clients(clients):
+            gspecs.append((spec, len(idx)))
+            if len(idx) == 1:
+                gparams.append(clients[idx[0]].params)
+            else:
+                gparams.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[clients[i].params for i in idx]))
+    if masks is not None and any(m is not None for m in masks):
+        return apply_group_masks(gspecs, gparams, masks)
     return tuple(gspecs), gparams
+
+
+def apply_group_masks(gspecs, gparams, group_masks):
+    """Statically slice the survivors out of a grouped representation.
+
+    ``group_masks`` is per-group: None (whole group survives) or a host
+    numpy bool array over the group's client axis. Because the masks are
+    static (admission decisions are made on host, before tracing), the
+    surviving rows are gathered with constant indices and fully-
+    quarantined groups disappear from the unrolled group loop — the
+    result is the *same pytree values and the same downstream program* as
+    a federation built without the quarantined clients, which is what
+    makes quarantine bit-identical to removal (tests/test_faults.py).
+
+    -> (gspecs, gparams) with surviving sizes; a group reduced to one
+    client becomes a flat singleton (matching ``stack_grouped`` of the
+    reduced federation).
+    """
+    if group_masks is None or all(m is None for m in group_masks):
+        return tuple(gspecs), list(gparams)
+    if len(group_masks) != len(gspecs):
+        raise ValueError(f"group_masks has {len(group_masks)} entries for "
+                         f"{len(gspecs)} groups")
+    new_specs, new_params = [], []
+    for (spec, size), params, gm in zip(gspecs, gparams, group_masks):
+        if gm is None:
+            new_specs.append((spec, size))
+            new_params.append(params)
+            continue
+        gm = np.asarray(gm, bool)
+        if gm.shape != (size,):
+            raise ValueError(f"group mask shape {gm.shape} != ({size},)")
+        idx = np.nonzero(gm)[0]
+        if idx.size == 0:
+            continue                     # fully quarantined: static skip
+        if idx.size == size:
+            new_specs.append((spec, size))
+            new_params.append(params)
+        elif idx.size == 1:
+            new_specs.append((spec, 1))
+            new_params.append(jax.tree.map(
+                lambda a, _i=int(idx[0]): a[_i], params))
+        else:
+            new_specs.append((spec, int(idx.size)))
+            new_params.append(jax.tree.map(lambda a: a[idx], params))
+    if not new_specs:
+        raise ValueError("every client is quarantined: empty ensemble")
+    return tuple(new_specs), new_params
 
 
 def _group_stack_forward(params, spec, x, size, with_stats):
@@ -165,7 +229,8 @@ def _group_sum_sharded(params, spec, x, size, mesh, with_stats):
 
 
 def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
-                            with_bn_stats: bool = False, mesh=None):
+                            with_bn_stats: bool = False, mesh=None,
+                            group_masks=None):
     """Eq. (1) over the grouped representation — one vmapped forward per
     architecture group instead of one unrolled forward per client.
 
@@ -177,7 +242,16 @@ def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
     groups whose size the ``clients`` axis divides evaluate as one
     shard_map whose group sum is a single psum over that axis; other
     groups (and singletons) keep the single-device path.
+
+    group_masks: optional per-group survivor masks (fl.protocol
+    admission). Statically sliced out up front (``apply_group_masks``),
+    so the average runs over survivors only — divisor included — and the
+    sharded path sees the surviving group size (re-checking
+    divisibility, falling back to the single-device forward when the
+    reduced size no longer shards).
     """
+    if group_masks is not None:
+        gspecs, gparams = apply_group_masks(gspecs, gparams, group_masks)
     if mesh is not None:
         from repro.fl.sharding import group_shardable
     m = sum(size for _, size in gspecs)

@@ -4,7 +4,11 @@ from repro.fl.fedavg import fedavg, fedavg_stacked
 from repro.fl.federation import (ClientList, build_grouped_federation,
                                  client_specs, group_specs,
                                  train_clients_grouped)
-from repro.fl.protocol import CommLedger, build_federation, param_bytes
+from repro.fl.protocol import (CommLedger, QuorumError, UploadError,
+                               admit_uploads, build_federation, param_bytes,
+                               validate_upload)
+from repro.fl.faults import (FAULT_KINDS, Fault, apply_upload_faults,
+                             build_fault_plan, corrupt_params)
 from repro.fl.baselines import fed_df, fed_dafl, fed_adi, make_distill_step
 from repro.fl.multiround import dense_multi_round
 from repro.fl.sharding import (CLIENT_AXIS, group_shardable, put_grouped,
@@ -14,7 +18,10 @@ __all__ = ["local_update", "local_update_grouped",
            "make_grouped_local_update", "make_local_step", "fedavg",
            "fedavg_stacked", "ClientList", "build_grouped_federation",
            "client_specs", "group_specs", "train_clients_grouped",
-           "CommLedger", "build_federation", "param_bytes", "fed_df",
+           "CommLedger", "QuorumError", "UploadError", "admit_uploads",
+           "build_federation", "param_bytes", "validate_upload",
+           "FAULT_KINDS", "Fault", "apply_upload_faults",
+           "build_fault_plan", "corrupt_params", "fed_df",
            "fed_dafl", "fed_adi", "make_distill_step", "dense_multi_round",
            "CLIENT_AXIS", "group_shardable", "put_grouped", "put_stacked",
            "resolve_mesh", "stack_specs"]

@@ -1,0 +1,215 @@
+"""Seeded upload-fault injection: the chaos half of the fault-tolerant
+one-shot round (DESIGN.md §10).
+
+DENSE's single communication round cannot be retried, so the robustness
+of that one round is the whole ballgame: a client whose upload never
+arrives, arrives corrupted (NaN/Inf), or arrives adversarially perturbed
+(scaled noise, sign flip) must not take the run down with it. This module
+owns the *injection* side — a deterministic, per-client fault plan applied
+at the upload boundary of both LocalUpdate engines — and
+``fl.protocol.admit_uploads`` owns the *defense* side (finite/shape/norm
+screens, quarantine masks, quorum).
+
+Fault kinds (``FAULT_KINDS``):
+
+  * ``drop``     — the upload never arrives (straggler/crash). Recorded as
+                   a ``kind="dropped"`` CommLedger event; excluded from
+                   ``uplink_bytes`` (the bytes never landed).
+  * ``delay``    — the upload arrives one round late (multi-round only;
+                   in the one-shot round there is no next round, so it
+                   degenerates to ``drop``). The stale round-r params are
+                   presented as the client's round-(r+1) upload.
+  * ``nan``/``inf`` — bitrot/overflow corruption: a seeded fraction of
+                   every leaf is overwritten with NaN/Inf. Caught by the
+                   admission finite screen.
+  * ``noise``    — Byzantine scaled-noise perturbation: params +=
+                   scale * sigma_leaf * N(0, 1) per leaf. Caught by the
+                   parameter-norm outlier screen (when enabled).
+  * ``signflip`` — Byzantine sign flip (params -> -params). Norm-preserving
+                   by construction: it deliberately PASSES the norm screen
+                   (the documented detection gap — DESIGN.md §10).
+
+Determinism: the plan is a pure function of ``(scfg.fault_plan,
+scfg.dropout_frac, scfg.fault_seed, round)`` and every corruption derives
+its noise from ``jax.random.fold_in(key, client_index)``, so a chaos run
+replays bit-identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("drop", "delay", "nan", "inf", "noise", "signflip")
+
+# fraction of each leaf's elements overwritten by nan/inf corruption
+# (at least one element per leaf, so a single-scalar leaf is still hit)
+_CORRUPT_FRAC = 0.01
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One planned upload fault: ``client``'s round-``round`` upload."""
+    client: int
+    kind: str
+    scale: float = 10.0            # noise multiplier (kind="noise" only)
+    round: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {FAULT_KINDS})")
+
+
+def normalize_plan(plan) -> tuple[Fault, ...]:
+    """Accept ``Fault`` instances or (client, kind[, scale[, round]])
+    tuples — the form a frozen scfg dataclass can hold."""
+    out = []
+    for f in plan or ():
+        out.append(f if isinstance(f, Fault) else Fault(*f))
+    return tuple(out)
+
+
+def build_fault_plan(scfg, *, round: int = 0,
+                     n_clients: int | None = None) -> dict[int, Fault]:
+    """The per-client fault plan for one round: explicit ``scfg.fault_plan``
+    entries plus ``scfg.dropout_frac`` seeded drop faults.
+
+    dropout_frac picks ``round(frac * m)`` clients per round with
+    ``np.random.default_rng(fault_seed + round)`` — deterministic, and
+    disjoint from explicitly-planned clients.
+    """
+    m = n_clients if n_clients is not None else scfg.n_clients
+    plan = {f.client: f
+            for f in normalize_plan(getattr(scfg, "fault_plan", ()))
+            if f.round == round}
+    for i in plan:
+        if not 0 <= i < m:
+            raise ValueError(f"fault_plan client {i} out of range for "
+                             f"m={m}")
+    frac = float(getattr(scfg, "dropout_frac", 0.0))
+    if frac:
+        if not 0.0 <= frac < 1.0:
+            raise ValueError(f"dropout_frac must be in [0, 1), got {frac}")
+        rng = np.random.default_rng(
+            int(getattr(scfg, "fault_seed", 0)) + round)
+        free = [i for i in range(m) if i not in plan]
+        k = min(len(free), int(np.round(frac * m)))
+        for i in rng.choice(len(free), size=k, replace=False):
+            plan[free[int(i)]] = Fault(client=free[int(i)], kind="drop",
+                                       round=round)
+    return plan
+
+
+def corrupt_params(params, kind: str, *, key, scale: float = 10.0):
+    """Pure, seeded corruption of one upload's params pytree."""
+    if kind == "signflip":
+        return jax.tree.map(lambda a: -a, params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, a in zip(keys, leaves):
+        a = jnp.asarray(a)
+        if kind == "noise":
+            sigma = jnp.std(a.astype(jnp.float32)) + 1e-8
+            out.append((a.astype(jnp.float32) + scale * sigma
+                        * jax.random.normal(k, a.shape)).astype(a.dtype))
+        elif kind in ("nan", "inf"):
+            bad = jnp.float32(jnp.nan if kind == "nan" else jnp.inf)
+            u = jax.random.uniform(k, a.shape)
+            hit = u < jnp.maximum(_CORRUPT_FRAC,
+                                  1.0 / max(a.size, 1))      # >=1 expected
+            out.append(jnp.where(hit, bad, a.astype(jnp.float32))
+                       .astype(a.dtype))
+        else:
+            raise ValueError(f"corrupt_params cannot apply kind {kind!r}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def rebuild_clients(clients, new_params: Sequence):
+    """Clone a federation with per-client params replaced, preserving the
+    grouped no-restack representation for untouched groups."""
+    from repro.core.ensemble import Client, group_clients
+    from repro.fl.federation import ClientList
+
+    rebuilt = [Client(spec=c.spec, params=new_params[i], n_data=c.n_data,
+                      class_counts=c.class_counts)
+               for i, c in enumerate(clients)]
+    groups = group_clients(clients)
+    pre = getattr(clients, "grouped", None)
+    gspecs, gparams = [], []
+    for gi, (spec, idx) in enumerate(groups):
+        gspecs.append((spec, len(idx)))
+        changed = any(new_params[i] is not clients[i].params for i in idx)
+        if pre is not None and not changed:
+            gparams.append(pre[1][gi])          # untouched: no restack
+        elif len(idx) == 1:
+            gparams.append(new_params[idx[0]])
+        else:
+            gparams.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *[new_params[i] for i in idx]))
+    return ClientList(rebuilt, gspecs, gparams)
+
+
+def apply_upload_faults(clients, plan: dict[int, "Fault"], *, key,
+                        ledger=None, upload_tag: str = "round0-model-upload",
+                        pending: dict | None = None):
+    """Apply one round's fault plan at the upload boundary.
+
+    Returns ``(clients, arrived, delayed)``:
+
+      * ``clients`` — the federation with corrupted uploads substituted
+        (drop/delay leave params in place; ``arrived`` marks them missing);
+      * ``arrived`` — (m,) bool; False where the upload never landed this
+        round (drop, delay);
+      * ``delayed`` — {client: params} withheld by ``delay`` faults, to be
+        presented as next round's upload (multi-round).
+
+    ``pending`` (previous round's delayed uploads) are substituted as this
+    round's arrivals for those clients — the stale-upload semantics of a
+    straggler that is exactly one round behind.
+
+    Ledger accounting (``CommLedger`` kinds): every client gets exactly one
+    ``dir="up"`` event per round — ``delivered`` (counted in uplink_bytes),
+    ``dropped`` or ``delayed`` (bytes never landed, excluded). Admission
+    later adds zero-byte ``rejected`` events for quarantined arrivals.
+    """
+    from repro.fl.protocol import param_bytes
+
+    m = len(clients)
+    arrived = np.ones(m, bool)
+    delayed: dict[int, object] = {}
+    new_params = [c.params for c in clients]
+    for i, fault in sorted(plan.items()):
+        nbytes = param_bytes(clients[i].params)
+        if fault.kind in ("drop", "delay"):
+            arrived[i] = False
+            if fault.kind == "delay":
+                delayed[i] = clients[i].params
+            if ledger is not None:
+                ledger.record("up", f"client{i}", nbytes, upload_tag,
+                              kind="dropped" if fault.kind == "drop"
+                              else "delayed")
+        else:
+            new_params[i] = corrupt_params(
+                clients[i].params, fault.kind,
+                key=jax.random.fold_in(key, i), scale=fault.scale)
+    for i, stale in (pending or {}).items():
+        new_params[i] = stale                  # last round's upload lands
+        arrived[i] = True
+    if ledger is not None:
+        for i in range(m):
+            if arrived[i]:
+                ledger.record("up", f"client{i}",
+                              param_bytes(new_params[i]), upload_tag)
+    changed = any(new_params[i] is not clients[i].params for i in range(m))
+    if changed:
+        clients = rebuild_clients(clients, new_params)
+    return clients, arrived, delayed
+
+
+__all__ = ["FAULT_KINDS", "Fault", "normalize_plan", "build_fault_plan",
+           "corrupt_params", "apply_upload_faults", "rebuild_clients"]

@@ -20,9 +20,19 @@ from repro.core.ensemble import Client
 
 def _check_n_data(n_data) -> np.ndarray:
     n = np.asarray(n_data, np.float64)
-    if n.size == 0 or np.any(n <= 0):
-        raise ValueError("FedAvg weights are n_k / n; every client must "
-                         f"report n_data > 0, got {list(n_data)}")
+    if n.size == 0:
+        raise ValueError("FedAvg weights are n_k / n; got an empty "
+                         "n_data list")
+    if np.any(n <= 0):
+        # only the offending entries: interpolating all m counts is
+        # unreadable at the ROADMAP's m=1000 target
+        bad = [(i, v) for i, v in enumerate(np.asarray(n_data).tolist())
+               if v <= 0]
+        shown, extra = bad[:5], len(bad) - 5
+        raise ValueError(
+            "FedAvg weights are n_k / n; every client must report "
+            f"n_data > 0, got (client, n_data): {shown}"
+            + (f" ... and {extra} more" if extra > 0 else ""))
     return n
 
 
@@ -36,26 +46,57 @@ def _weighted_reduce(stacked, w):
     return jax.tree.map(avg, stacked)
 
 
-def fedavg_stacked(stacked_params, n_data) -> dict:
+def fedavg_stacked(stacked_params, n_data, survivor_mask=None) -> dict:
     """FedAvg over params stacked on a leading client axis — the grouped
     engine's native representation. n_data: per-client example counts
-    (must be positive; they define the weights n_k / n)."""
+    (must be positive; they define the weights n_k / n).
+
+    survivor_mask: optional STATIC host bool mask over the client axis
+    (fl.protocol admission). Survivors are sliced out with constant
+    indices before the reduce — same rows, same weights, same program as
+    a federation stacked without the quarantined clients, so masked
+    FedAvg is bit-identical to FedAvg over the survivors
+    (tests/test_faults.py). Quarantined clients' n_data never enters the
+    weight normalization (and is exempt from the positivity check)."""
+    if survivor_mask is not None:
+        mask = np.asarray(survivor_mask, bool)
+        n_all = np.asarray(n_data)
+        if mask.shape != (n_all.shape[0],):
+            raise ValueError(f"survivor_mask shape {mask.shape} != "
+                             f"({n_all.shape[0]},)")
+        if not mask.any():
+            raise ValueError("FedAvg over zero surviving clients")
+        idx = np.nonzero(mask)[0]
+        n_data = n_all[idx]
+        if not mask.all():
+            stacked_params = jax.tree.map(lambda a: a[idx], stacked_params)
     n = _check_n_data(n_data)
     return _weighted_reduce(stacked_params, jnp.asarray(n / n.sum()))
 
 
 def fedavg(clients: Sequence[Client]) -> dict:
-    """theta_S = sum_k (n_k / n) theta^k."""
+    """theta_S = sum_k (n_k / n) theta^k.
+
+    A federation that went through upload admission carries
+    ``survivor_mask``; quarantined clients are excluded from the average
+    (bit-identically to a federation without them)."""
     kinds = {c.spec for c in clients}
     if len(kinds) != 1:
         raise ValueError("FedAvg requires homogeneous client models; got "
                          f"{[c.spec.kind for c in clients]}")
+    mask = getattr(clients, "survivor_mask", None)
     n_data = [c.n_data for c in clients]
     grouped = getattr(clients, "grouped", None)
     if grouped is not None and len(grouped[0]) == 1 \
             and grouped[0][0][1] == len(clients) and len(clients) > 1:
         # grouped-engine federation: reduce the stacked axis directly
-        return fedavg_stacked(grouped[1][0], n_data)
+        return fedavg_stacked(grouped[1][0], n_data, survivor_mask=mask)
+    if mask is not None:
+        mask = np.asarray(mask, bool)
+        if not mask.any():
+            raise ValueError("FedAvg over zero surviving clients")
+        clients = [c for c, ok in zip(clients, mask) if ok]
+        n_data = [c.n_data for c in clients]
     _check_n_data(n_data)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                            *[c.params for c in clients])

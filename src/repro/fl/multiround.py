@@ -30,6 +30,15 @@ from repro.models.cnn import CNNSpec, cnn_init
 def dense_multi_round(key, scfg, data, *, rounds: int,
                       ledger: CommLedger | None = None, eval_fn=None,
                       seed: int = 0):
+    """Multi-round DENSE. With a fault plan configured (``scfg.fault_plan``
+    / ``scfg.dropout_frac``), each round's uploads pass through the fault
+    + admission boundary (fl/faults.py, fl.protocol.admit_uploads):
+    ``delay`` faults carry a client's round-r params forward as its
+    round-(r+1) upload, quarantined clients are survivor-masked out of
+    that round's server ensemble, and the broadcast still reaches every
+    client (the server can't know who will fault next round)."""
+    from repro.fl.faults import apply_upload_faults, build_fault_plan
+    from repro.fl.protocol import admit_uploads
     from repro.fl.sharding import resolve_mesh
     mode = getattr(scfg, "client_loop_mode", "grouped")
     if mode not in ("python", "grouped"):
@@ -46,7 +55,12 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
     keys = jax.random.split(key, scfg.n_clients + rounds + 1)
     global_p = None
     accs = []
+    pending: dict = {}                  # delayed uploads, one round stale
     for r in range(rounds):
+        plan = build_fault_plan(scfg, round=r)
+        faulty = bool(plan) or bool(pending)
+        train_ledger = None if faulty else ledger
+        tag = f"round{r}-model-upload"
         round_seeds = [seed * 1000 + r * 100 + i
                        for i in range(scfg.n_clients)]
         if mode == "grouped":
@@ -58,8 +72,7 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
                 init_keys=list(keys[:scfg.n_clients]),
                 init_params=None if global_p is None
                 else [global_p] * scfg.n_clients,
-                ledger=ledger, upload_tag=f"round{r}-model-upload",
-                mesh=mesh)
+                ledger=train_ledger, upload_tag=tag, mesh=mesh)
         else:
             clients = []
             for i, idx in enumerate(parts):
@@ -70,11 +83,19 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
                     lr=scfg.local_lr, momentum=scfg.local_momentum,
                     batch_size=scfg.batch_size,
                     num_classes=scfg.num_classes, seed=round_seeds[i])
-                if ledger is not None:
-                    ledger.record("up", f"client{i}", param_bytes(p),
-                                  f"round{r}-model-upload")
+                if train_ledger is not None:
+                    train_ledger.record("up", f"client{i}", param_bytes(p),
+                                        tag)
                 clients.append(Client(spec=spec, params=p, n_data=len(idx),
                                       class_counts=info["class_counts"]))
+        if faulty:
+            fault_key = jax.random.PRNGKey(
+                int(getattr(scfg, "fault_seed", 0)) * 7919 + r)
+            clients, arrived, pending = apply_upload_faults(
+                clients, plan, key=fault_key, ledger=ledger,
+                upload_tag=tag, pending=pending)
+            clients = admit_uploads(clients, arrived=arrived, scfg=scfg,
+                                    ledger=ledger, upload_tag=tag)
         global_p, _, _ = train_dense_server(
             keys[scfg.n_clients + r], clients, scfg, spec,
             student_params=global_p)

@@ -1,13 +1,37 @@
-"""One-shot FL protocol orchestration + communication accounting.
+"""One-shot FL protocol orchestration + communication accounting +
+server-side upload admission control.
 
 The whole point of one-shot FL is the communication profile: exactly one
 unidirectional client->server model upload. ``CommLedger`` records every
 transfer so tests can assert the one-shot property (m uploads, zero
 broadcasts) and benchmarks can compare against multi-round FedAvg
-(2 * m * rounds transfers).
+(2 * m * rounds transfers). Under fault injection (fl/faults.py) every
+client still gets exactly one up event per round, but the event ``kind``
+distinguishes ``delivered`` (counted in ``uplink_bytes``) from
+``dropped``/``delayed`` (bytes never landed) and ``rejected``
+(quarantined at admission — delivered bytes, excluded from aggregation).
+
+Admission control (``admit_uploads``) is the defense half of the fault
+layer (DESIGN.md §10): every arrived upload passes a finite check, a
+spec/shape validation against the client's declared architecture, and an
+optional parameter-norm outlier screen before it may join the ensemble.
+``scfg.upload_policy`` decides what a failed screen means:
+
+  * ``"quarantine"`` (default) — the client is excluded via survivor
+    masks (``clients.survivor_mask`` / ``clients.group_masks``) threaded
+    through ``stack_grouped`` consumers, and its stacked param slot is
+    ZERO-FILLED so NaN/Inf can't poison gradients through the masked
+    teacher (0 cotangent x NaN param = NaN; 0 x 0 = 0).
+  * ``"strict"`` — any failed screen raises ``UploadError``.
+
+If fewer than ``ceil(scfg.quorum * m)`` uploads survive, the round
+aborts loudly with ``QuorumError`` regardless of policy — a one-shot
+round with too few teachers is unsalvageable and silent degradation is
+worse than failure.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import jax
@@ -18,23 +42,46 @@ from repro.data.partition import dirichlet_partition
 from repro.fl.client import local_update
 from repro.models.cnn import CNNSpec, cnn_init
 
+EVENT_KINDS = ("delivered", "dropped", "delayed", "rejected")
+
 
 def param_bytes(tree) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+class UploadError(ValueError):
+    """An upload failed admission under ``upload_policy="strict"``."""
+
+
+class QuorumError(RuntimeError):
+    """Fewer than ``quorum * m`` uploads survived admission."""
 
 
 @dataclass
 class CommLedger:
     events: list = field(default_factory=list)
 
-    def record(self, direction: str, who: str, nbytes: int, what: str):
-        assert direction in ("up", "down")
+    def record(self, direction: str, who: str, nbytes: int, what: str,
+               kind: str = "delivered"):
+        if direction not in ("up", "down"):
+            raise ValueError(f"direction must be 'up' or 'down', "
+                             f"got {direction!r}")
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"kind must be one of {EVENT_KINDS}, "
+                             f"got {kind!r}")
         self.events.append({"dir": direction, "who": who,
-                            "bytes": int(nbytes), "what": what})
+                            "bytes": int(nbytes), "what": what,
+                            "kind": kind})
 
     @property
     def uplink_bytes(self) -> int:
-        return sum(e["bytes"] for e in self.events if e["dir"] == "up")
+        """Bytes that actually landed at the server. A later-quarantined
+        upload still consumed uplink — it keeps its ``delivered`` event;
+        the admission layer's ``rejected`` events are zero-byte audit
+        markers, so only ``delivered`` bytes are summed."""
+        return sum(e["bytes"] for e in self.events
+                   if e["dir"] == "up"
+                   and e.get("kind", "delivered") == "delivered")
 
     @property
     def downlink_bytes(self) -> int:
@@ -45,9 +92,197 @@ class CommLedger:
         """Number of distinct up-transfer phases (communication rounds)."""
         return len({e["what"] for e in self.events if e["dir"] == "up"})
 
+    def kinds(self, kind: str, direction: str = "up") -> list:
+        """Events of one kind (convenience for fault-accounting asserts)."""
+        return [e for e in self.events if e["dir"] == direction
+                and e.get("kind", "delivered") == kind]
+
+
+# ------------------------------------------------------------ admission ---
+
+def _template_shapes(spec: CNNSpec, cache={}):
+    """Expected (path -> shape/dtype) for one client architecture, from a
+    throwaway ``cnn_init`` (cached per spec — init is cheap at test scale
+    but admission runs once per client)."""
+    if spec not in cache:
+        tpl = cnn_init(jax.random.PRNGKey(0), spec)
+        cache[spec] = jax.tree.map(
+            lambda a: (np.shape(a), np.asarray(a).dtype), tpl)
+    return cache[spec]
+
+
+def validate_upload(params, spec: CNNSpec) -> str | None:
+    """Spec/shape + finite screen for one upload.
+
+    Returns None when admissible, else a human-readable reason string.
+    """
+    tpl = _template_shapes(spec)
+    p_leaves, p_def = jax.tree_util.tree_flatten(params)
+    # tpl leaves are (shape, dtype) tuples — flatten with is_leaf
+    t_leaves, t_def = jax.tree_util.tree_flatten(
+        tpl, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    if t_def != p_def:
+        return f"treedef mismatch vs {spec.kind} template"
+    for (shape, dtype), leaf in zip(t_leaves, p_leaves):
+        a = np.asarray(leaf)
+        if a.shape != shape:
+            return (f"shape mismatch vs {spec.kind} template: "
+                    f"got {a.shape}, want {shape}")
+        if np.issubdtype(a.dtype, np.floating) and not np.all(
+                np.isfinite(a)):
+            return "non-finite parameters"
+    return None
+
+
+def norm_outliers(clients, candidates, threshold: float) -> dict[int, str]:
+    """MAD-based parameter-norm outlier screen over same-spec cohorts.
+
+    For each architecture cohort with >= 5 candidates, flags clients whose
+    global param norm deviates from the cohort median by more than
+    ``threshold`` median-absolute-deviations. Opt-in
+    (``scfg.norm_screen > 0``); small cohorts are skipped — a 3-client
+    median is noise, not a defense. Sign flips are norm-preserving and
+    pass by design (the documented gap, DESIGN.md §10).
+    """
+    from repro.optim.optimizers import global_norm
+    out: dict[int, str] = {}
+    cohorts: dict[CNNSpec, list[int]] = {}
+    for i in candidates:
+        cohorts.setdefault(clients[i].spec, []).append(i)
+    for spec, idx in cohorts.items():
+        if len(idx) < 5:
+            continue
+        norms = np.array([float(global_norm(clients[i].params))
+                          for i in idx])
+        med = np.median(norms)
+        mad = np.median(np.abs(norms - med))
+        if mad == 0.0:
+            continue
+        for i, n in zip(idx, norms):
+            dev = abs(n - med) / mad
+            if dev > threshold:
+                out[i] = (f"param-norm outlier: {n:.3g} is {dev:.1f} MADs "
+                          f"from cohort median {med:.3g}")
+    return out
+
+
+def _zero_like(params):
+    return jax.tree.map(lambda a: np.zeros_like(np.asarray(a)), params)
+
+
+def admit_uploads(clients, *, arrived=None, scfg=None,
+                  upload_policy: str | None = None,
+                  quorum: float | None = None,
+                  norm_screen: float | None = None,
+                  ledger: CommLedger | None = None,
+                  upload_tag: str = "round0-model-upload"):
+    """Server-side admission control: screen every arrived upload, build
+    the survivor-masked federation.
+
+    Returns a ``ClientList`` with three extra attributes:
+
+      * ``survivor_mask`` — (m,) STATIC numpy bool, True = admitted;
+      * ``group_masks``   — per-group numpy bool arrays aligned with the
+        grouped representation's client axis (None for fully-surviving
+        groups — the common case keeps the unmasked compiled paths);
+      * ``quarantined``   — {client_index: reason}.
+
+    Quarantined/missing clients keep their ``Client`` entry (callers may
+    inspect them) but their stacked param slot is zero-filled and their
+    mask bit cleared, so every masked consumer — grouped_ensemble_logits,
+    the shard_map psum teacher, fedavg_stacked — produces bit-identical
+    results to a federation built without them (adding exact zeros is
+    exact in any reduction order).
+
+    The masks are host-side constants baked into jit at trace time: no
+    dynamic-shape tracing, and fully-quarantined groups are statically
+    skipped.
+    """
+    from repro.fl.federation import ClientList
+
+    policy = upload_policy if upload_policy is not None else \
+        getattr(scfg, "upload_policy", "quarantine")
+    if policy not in ("strict", "quarantine"):
+        raise ValueError(f"upload_policy must be 'strict' or 'quarantine', "
+                         f"got {policy!r}")
+    q = quorum if quorum is not None else getattr(scfg, "quorum", 0.5)
+    screen = norm_screen if norm_screen is not None else \
+        getattr(scfg, "norm_screen", 0.0)
+
+    m = len(clients)
+    arrived = np.ones(m, bool) if arrived is None else np.asarray(
+        arrived, bool)
+    quarantined: dict[int, str] = {}
+    for i in range(m):
+        if not arrived[i]:
+            quarantined[i] = "upload never arrived"
+            continue
+        reason = validate_upload(clients[i].params, clients[i].spec)
+        if reason is not None:
+            quarantined[i] = reason
+    if screen and screen > 0:
+        ok = [i for i in range(m) if i not in quarantined]
+        quarantined.update(norm_outliers(clients, ok, float(screen)))
+
+    rejected = {i: r for i, r in quarantined.items() if arrived[i]}
+    if policy == "strict" and rejected:
+        i, reason = next(iter(sorted(rejected.items())))
+        raise UploadError(
+            f"client{i} upload failed admission under strict policy: "
+            f"{reason}")
+    if ledger is not None:
+        # zero-byte audit markers under the SAME tag: the rejected
+        # upload's bytes are already on its "delivered" event, and a new
+        # tag would inflate ledger.rounds
+        for i, reason in sorted(rejected.items()):
+            ledger.record("up", f"client{i}", 0, upload_tag,
+                          kind="rejected")
+
+    survivor = np.array([i not in quarantined for i in range(m)], bool)
+    need = math.ceil(q * m)
+    if int(survivor.sum()) < need:
+        raise QuorumError(
+            f"quorum failure: {int(survivor.sum())}/{m} uploads survived "
+            f"admission, need >= {need} (quorum={q}); quarantined: "
+            f"{ {i: r for i, r in sorted(quarantined.items())} }")
+
+    if survivor.all():
+        out = ClientList(list(clients), *stack_or_reuse(clients))
+        out.survivor_mask = survivor
+        out.group_masks = [None] * len(out.grouped[0])
+        out.quarantined = {}
+        return out
+
+    # zero-fill quarantined slots, then restack + build per-group masks
+    from repro.fl.faults import rebuild_clients
+    new_params = [(_zero_like(c.params) if i in quarantined else c.params)
+                  for i, c in enumerate(clients)]
+    out = rebuild_clients(clients, new_params)
+    from repro.core.ensemble import group_clients
+    group_masks = []
+    for spec, idx in group_clients(out):
+        gm = survivor[list(idx)]
+        group_masks.append(None if gm.all() else gm)
+    out.survivor_mask = survivor
+    out.group_masks = group_masks
+    out.quarantined = quarantined
+    return out
+
+
+def stack_or_reuse(clients):
+    """(gspecs, gparams) — the prebuilt grouped representation when the
+    federation carries one, else a fresh ``stack_grouped``."""
+    from repro.core.ensemble import stack_grouped
+    gspecs, gparams = stack_grouped(clients)
+    return gspecs, gparams
+
+
+# ----------------------------------------------------------- federation ---
 
 def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
-                     seed: int = 0):
+                     seed: int = 0, round: int = 0, pending=None,
+                     return_faults: bool = False):
     """Partition data (Dirichlet, §3.1.2), train every client locally,
     and 'upload' the models: the one communication round of DENSE.
 
@@ -65,15 +300,53 @@ def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
 
     Both consume identical per-client init keys and minibatch seeds and
     agree to float tolerance (tests/test_federation.py).
+
+    With a fault plan configured (``scfg.fault_plan`` /
+    ``scfg.dropout_frac``), training runs ledger-silent and the upload
+    boundary is owned by ``fl.faults.apply_upload_faults`` + admission:
+    the ledger then records what actually happened per client (delivered /
+    dropped / delayed / rejected) instead of assuming every upload lands.
+    The no-fault path records exactly as before. ``return_faults=True``
+    additionally returns the (arrived, delayed) fault outcome — the
+    multi-round driver needs ``delayed`` to carry stale uploads forward.
     """
+    from repro.fl.faults import apply_upload_faults, build_fault_plan
+
+    plan = build_fault_plan(scfg, round=round) if scfg is not None else {}
+    faulty = bool(plan) or bool(pending)
+    train_ledger = None if faulty else ledger
+
     mode = getattr(scfg, "client_loop_mode", "grouped")
     if mode == "grouped":
         from repro.fl.federation import build_grouped_federation
-        return build_grouped_federation(key, scfg, data, ledger=ledger,
-                                        seed=seed)
-    if mode != "python":
+        clients, shards = build_grouped_federation(
+            key, scfg, data, ledger=train_ledger, seed=seed)
+    elif mode == "python":
+        clients, shards = _build_python_federation(
+            key, scfg, data, ledger=train_ledger, seed=seed)
+    else:
         raise ValueError(f"unknown client_loop_mode {mode!r} "
                          "(expected 'python' or 'grouped')")
+
+    if not faulty:
+        if return_faults:
+            return clients, shards, (np.ones(len(clients), bool), {})
+        return clients, shards
+    fault_key = jax.random.PRNGKey(
+        int(getattr(scfg, "fault_seed", 0)) * 7919 + round)
+    tag = f"round{round}-model-upload" if round else "round0-model-upload"
+    clients, arrived, delayed = apply_upload_faults(
+        clients, plan, key=fault_key, ledger=ledger, upload_tag=tag,
+        pending=pending)
+    clients = admit_uploads(clients, arrived=arrived, scfg=scfg,
+                            ledger=ledger, upload_tag=tag)
+    if return_faults:
+        return clients, shards, (arrived, delayed)
+    return clients, shards
+
+
+def _build_python_federation(key, scfg, data, *, ledger, seed):
+    """The per-client reference LocalUpdate loop (ground truth)."""
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     clients, shards = [], []

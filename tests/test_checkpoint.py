@@ -1,0 +1,134 @@
+"""checkpoint/io.py round-trips + DENSE server-loop resume.
+
+The checkpoint layer is what makes a killed DENSE run recoverable
+(scfg.checkpoint_every / checkpoint_path, DESIGN.md §10): the full server
+state — generator/student params, both optimizer states, the base
+epoch-key and the epoch index — round-trips through one npz file, and a
+resumed run replays the remaining epochs bit-identically because both
+drivers re-derive the per-epoch key stream from the restored base key.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (checkpoint_exists, load_meta,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs.paper_cifar import DenseExperimentConfig
+from repro.core.dense import train_dense_server
+from repro.data import make_classification_data
+from repro.fl import build_federation
+
+SCFG = DenseExperimentConfig(
+    n_clients=3, alpha=0.5, local_epochs=2, batch_size=16, num_classes=4,
+    image_size=8, in_ch=1, train_per_class=37, test_per_class=8,
+    client_kinds=("cnn1",) * 3, global_kind="cnn1", width=0.25, nz=16,
+    t_g=1, epochs=6, synth_batch=16)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ round trip ---
+
+def test_roundtrip_nested_pytree_and_dtypes(tmp_path):
+    """Nested dict + list pytree round-trips with leaf dtypes preserved
+    (f32 params, f16 halves, int32 counters, uint32 PRNG keys)."""
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.float16)},
+            "opt": [{"m": jnp.zeros((2, 3), jnp.float32),
+                     "t": jnp.asarray(7, jnp.int32)},
+                    jnp.asarray([1, 2], jnp.int64)],
+            "key": jax.random.PRNGKey(3)}
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, tree)
+    assert checkpoint_exists(path) and checkpoint_exists(path + ".npz")
+    back = restore_checkpoint(path, jax.tree.map(np.zeros_like, tree))
+    assert jax.tree_util.tree_structure(back) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_casts_to_like_dtypes(tmp_path):
+    """Leaves come back in the `like` tree's dtypes even when the stored
+    dtype differs (e.g. a checkpoint written from an f32 run restored
+    into an f16 template)."""
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, {"w": np.ones((2,), np.float64)})
+    back = restore_checkpoint(path, {"w": jnp.zeros((2,), jnp.float16)})
+    assert np.asarray(back["w"]).dtype == np.float16
+
+
+def test_meta_json(tmp_path):
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, {"w": np.zeros(2)}, meta={"epoch": 4, "note": "x"})
+    meta = load_meta(path)
+    assert meta == {"epoch": 4, "note": "x"}
+
+
+def test_mismatched_treedef_raises_value_error(tmp_path):
+    """Key-set mismatch is a ValueError (not a bare assert, which would
+    vanish under `python -O`) naming the differing keys."""
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, {"a": np.zeros(2), "b": np.ones(3)})
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(path, {"a": np.zeros(2), "c": np.ones(3)})
+
+
+def test_checkpoint_exists_false_for_missing(tmp_path):
+    assert not checkpoint_exists(os.path.join(tmp_path, "nope"))
+
+
+# ------------------------------------------------- DENSE server resume ---
+
+@pytest.fixture(scope="module")
+def federation():
+    data = make_classification_data(
+        0, num_classes=SCFG.num_classes, size=SCFG.image_size,
+        ch=SCFG.in_ch, train_per_class=SCFG.train_per_class,
+        test_per_class=SCFG.test_per_class)
+    clients, _ = build_federation(jax.random.PRNGKey(0), SCFG, data)
+    return clients
+
+
+@pytest.mark.parametrize("loop_mode", ["python", "fused"])
+def test_dense_resume_matches_uninterrupted(tmp_path, federation,
+                                            loop_mode):
+    """Kill the server loop mid-distillation (after the epoch-4
+    checkpoint, mid-way to epoch 6), resume from the checkpoint: final
+    student AND generator params are bit-identical to an uninterrupted
+    run, for both epoch drivers."""
+    scfg = dataclasses.replace(SCFG, loop_mode=loop_mode, loop_chunk=3)
+    ck = os.path.join(tmp_path, f"ck_{loop_mode}")
+    scfg_ck = dataclasses.replace(scfg, checkpoint_every=2,
+                                  checkpoint_path=ck)
+    s_full, g_full, _ = train_dense_server(jax.random.PRNGKey(7),
+                                           federation, scfg)
+    # killed run: stops after epoch 5; last checkpoint is epoch 4
+    train_dense_server(jax.random.PRNGKey(7), federation, scfg_ck,
+                       _stop_after_epoch=5)
+    assert checkpoint_exists(ck)
+    assert load_meta(ck)["epoch"] == 4
+    s_res, g_res, hist = train_dense_server(jax.random.PRNGKey(7),
+                                            federation, scfg_ck)
+    _leaves_equal(s_res, s_full)
+    _leaves_equal(g_res, g_full)
+    # history covers only the post-resume epochs
+    assert len(hist.dis_loss) == SCFG.epochs - 4
+
+
+def test_resume_ignored_without_checkpoint_config(tmp_path, federation):
+    """checkpoint_every=0 (default) never writes or reads state."""
+    s_a, _, _ = train_dense_server(jax.random.PRNGKey(7), federation, SCFG)
+    s_b, _, _ = train_dense_server(jax.random.PRNGKey(7), federation, SCFG)
+    _leaves_equal(s_a, s_b)
+    assert not os.listdir(tmp_path)

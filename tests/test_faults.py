@@ -1,0 +1,452 @@
+"""Fault injection + admission control: the fault-tolerant one-shot round.
+
+The load-bearing property (DESIGN.md §10): with
+``upload_policy="quarantine"``, a federation where client k's upload is
+dropped or corrupted produces BIT-IDENTICAL ensemble logits, FedAvg
+params and DENSE stage-2 trajectories to a federation built without
+client k. Admission decisions are host-side static masks, so quarantined
+clients are statically sliced out of the grouped representation
+(ensemble.apply_group_masks) — the surviving computation is literally
+the same program on the same values as the without-k federation.
+
+The chosen quarantined client never changes the group first-occurrence
+order (removal of a group's *first* client reorders heterogeneous
+federations; the equivalence there is float-tolerance, not bitwise — we
+pin the bitwise claim on order-preserving drops).
+
+CI's ``chaos`` job reruns this module across the fault-kind x policy
+matrix under XLA_FLAGS=--xla_force_host_platform_device_count=8
+(CHAOS_KIND / CHAOS_POLICY env), so the masked ensemble is exercised
+through the genuinely-sharded psum teacher path; on the plain tier-1
+host the mesh is degenerate and the same tests pin the routing.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cifar import DenseExperimentConfig
+from repro.core.dense import train_dense_server
+from repro.core.ensemble import (apply_group_masks, ensemble_logits,
+                                 grouped_ensemble_logits, split_clients,
+                                 stack_grouped)
+from repro.data import make_classification_data
+from repro.fl import (CommLedger, Fault, QuorumError, UploadError,
+                      admit_uploads, build_fault_plan, build_federation,
+                      corrupt_params, dense_multi_round, fedavg,
+                      fedavg_stacked, param_bytes)
+from repro.fl.faults import apply_upload_faults
+from repro.launch.mesh import make_client_mesh
+from repro.models.cnn import CNNSpec, cnn_init
+
+SCFG = DenseExperimentConfig(
+    n_clients=3, alpha=0.5, local_epochs=2, batch_size=16, num_classes=4,
+    image_size=8, in_ch=1, train_per_class=37, test_per_class=8,
+    client_kinds=("cnn1",) * 3, global_kind="cnn1", width=0.25, nz=16,
+    t_g=1, epochs=2, synth_batch=16)
+
+# CI chaos matrix: parametrize the injected kind/policy from env so one
+# test module covers the whole fault-kind x policy grid
+CHAOS_KIND = os.environ.get("CHAOS_KIND", "drop")
+CHAOS_POLICY = os.environ.get("CHAOS_POLICY", "quarantine")
+
+
+def _data(seed=0, scfg=SCFG):
+    return make_classification_data(
+        seed, num_classes=scfg.num_classes, size=scfg.image_size,
+        ch=scfg.in_ch, train_per_class=scfg.train_per_class,
+        test_per_class=scfg.test_per_class)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _x(batch=4, size=8, ch=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((batch, size, size, ch))
+                       .astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def healthy():
+    """One healthy 3-client federation per engine (module-cached)."""
+    data = _data()
+    out = {}
+    for mode in ("python", "grouped"):
+        scfg = dataclasses.replace(SCFG, client_loop_mode=mode)
+        out[mode] = build_federation(jax.random.PRNGKey(0), scfg, data)[0]
+    return data, out
+
+
+# ------------------------------------------------------------ fault plan ---
+
+def test_fault_plan_deterministic_and_seeded():
+    scfg = dataclasses.replace(SCFG, n_clients=10, dropout_frac=0.3,
+                               fault_seed=4, fault_plan=((1, "nan"),))
+    p1 = build_fault_plan(scfg)
+    p2 = build_fault_plan(scfg)
+    assert p1.keys() == p2.keys() and p1[1].kind == "nan"
+    drops = [i for i, f in p1.items() if f.kind == "drop"]
+    assert len(drops) == 3 and 1 not in drops
+    # different seed, different victims (overwhelmingly likely)
+    p3 = build_fault_plan(dataclasses.replace(scfg, fault_seed=5))
+    assert p1.keys() != p3.keys() or \
+        [p1[k].kind for k in sorted(p1)] != [p3[k].kind for k in sorted(p3)]
+
+
+def test_fault_plan_validates():
+    with pytest.raises(ValueError):
+        Fault(client=0, kind="gremlin")
+    with pytest.raises(ValueError):
+        build_fault_plan(dataclasses.replace(SCFG, fault_plan=((7, "drop"),)))
+    with pytest.raises(ValueError):
+        build_fault_plan(dataclasses.replace(SCFG, dropout_frac=1.5))
+
+
+def test_corrupt_params_kinds():
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    p = cnn_init(jax.random.PRNGKey(0), spec)
+    key = jax.random.PRNGKey(1)
+    nan_p = corrupt_params(p, "nan", key=key)
+    assert any(np.isnan(np.asarray(l)).any() for l in jax.tree.leaves(nan_p))
+    inf_p = corrupt_params(p, "inf", key=key)
+    assert any(np.isinf(np.asarray(l)).any() for l in jax.tree.leaves(inf_p))
+    sf = corrupt_params(p, "signflip", key=key)
+    _leaves_equal(sf, jax.tree.map(lambda a: -a, p))
+    noisy = corrupt_params(p, "noise", key=key, scale=10.0)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(noisy))
+    # seeded: same key -> same corruption
+    _leaves_equal(noisy, corrupt_params(p, "noise", key=key, scale=10.0))
+
+
+# ---------------------------------------------------------------- ledger ---
+
+def test_ledger_rejects_bad_direction_and_kind():
+    led = CommLedger()
+    with pytest.raises(ValueError):
+        led.record("sideways", "c0", 1, "x")
+    with pytest.raises(ValueError):
+        led.record("up", "c0", 1, "x", kind="vanished")
+
+
+def test_ledger_fault_accounting(healthy):
+    """Every client gets exactly one up event per round; dropped bytes
+    leave uplink_bytes; a rejected upload keeps its delivered bytes plus
+    a zero-byte rejected marker; rounds stays 1."""
+    data, _ = healthy
+    scfg = dataclasses.replace(SCFG, fault_plan=((1, "nan"), (2, "drop")),
+                               quorum=0.3)
+    led = CommLedger()
+    clients, _ = build_federation(jax.random.PRNGKey(0), scfg, data,
+                                  ledger=led)
+    per_kind = {k: led.kinds(k) for k in ("delivered", "dropped",
+                                          "delayed", "rejected")}
+    assert [e["who"] for e in per_kind["dropped"]] == ["client2"]
+    assert [e["who"] for e in per_kind["rejected"]] == ["client1"]
+    assert sorted(e["who"] for e in per_kind["delivered"]) == \
+        ["client0", "client1"]
+    assert led.rounds == 1 and led.downlink_bytes == 0
+    assert led.uplink_bytes == sum(e["bytes"]
+                                   for e in per_kind["delivered"])
+    assert all(e["bytes"] == 0 for e in per_kind["rejected"])
+
+
+def test_no_fault_path_ledger_unchanged(healthy):
+    """Without a fault plan the events list is exactly the pre-fault
+    format (all delivered, one per client, trained bytes)."""
+    data, fed = healthy
+    led = CommLedger()
+    clients, _ = build_federation(jax.random.PRNGKey(0), SCFG, data,
+                                  ledger=led)
+    assert [e["kind"] for e in led.events] == ["delivered"] * 3
+    assert led.uplink_bytes == sum(param_bytes(c.params) for c in clients)
+    assert not hasattr(clients, "survivor_mask")
+
+
+# --------------------------------------- quarantine ≡ removal (bitwise) ---
+
+@pytest.mark.parametrize("engine", ["python", "grouped"])
+def test_quarantine_equivalent_to_removal(healthy, engine):
+    """Drop/corrupt client 2 under quarantine: ensemble logits, FedAvg
+    and the DENSE stage-2 student are bit-identical to the same
+    federation with client 2 removed — both client engines."""
+    data, fed = healthy
+    kind = CHAOS_KIND if CHAOS_KIND in ("drop", "nan", "inf") else "drop"
+    scfg = dataclasses.replace(SCFG, client_loop_mode=engine,
+                               fault_plan=((2, kind),),
+                               upload_policy="quarantine")
+    cq, _ = build_federation(jax.random.PRNGKey(0), scfg, data)
+    assert cq.quarantined.keys() == {2}
+    ref = [c for i, c in enumerate(fed[engine]) if i != 2]
+
+    x = _x()
+    gs_q, gp_q = stack_grouped(cq)
+    gs_r, gp_r = stack_grouped(ref)
+    assert [(s.kind, n) for s, n in gs_q] == [(s.kind, n)
+                                              for s, n in gs_r]
+    np.testing.assert_array_equal(
+        np.asarray(grouped_ensemble_logits(gs_q, gp_q, x)),
+        np.asarray(grouped_ensemble_logits(gs_r, gp_r, x)))
+
+    _leaves_equal(fedavg(cq), fedavg(ref))
+
+    s_q, _, _ = train_dense_server(jax.random.PRNGKey(3), cq, scfg)
+    s_r, _, _ = train_dense_server(jax.random.PRNGKey(3), ref, scfg)
+    _leaves_equal(s_q, s_r)
+
+
+def test_quarantine_equivalence_sharded(healthy):
+    """The masked ensemble through the shard_map psum teacher: the
+    surviving group size re-checks divisibility, and where it shards the
+    result is bit-identical to the without-k federation evaluated on the
+    same mesh (degenerate 1-device mesh on the plain tier-1 host; the
+    chaos CI env provides 8 host devices)."""
+    data = _data()
+    scfg5 = dataclasses.replace(SCFG, n_clients=5,
+                                client_kinds=("cnn1",) * 5, local_epochs=1)
+    clients, _ = build_federation(jax.random.PRNGKey(0), scfg5, data)
+    scfg_f = dataclasses.replace(scfg5, fault_plan=((3, "drop"),))
+    cq, _ = build_federation(jax.random.PRNGKey(0), scfg_f, data)
+    ref = [c for i, c in enumerate(clients) if i != 3]
+    # 4 survivors: take at most 4 devices so the clients axis divides
+    devs = jax.devices()[:min(4, len(jax.devices()))]
+    if len(devs) == 3:
+        devs = devs[:2]
+    mesh = make_client_mesh(devices=devs)
+    x = _x()
+    gs_q, gp_q = stack_grouped(cq)
+    gs_r, gp_r = stack_grouped(ref)
+    np.testing.assert_array_equal(
+        np.asarray(grouped_ensemble_logits(gs_q, gp_q, x, mesh=mesh)),
+        np.asarray(grouped_ensemble_logits(gs_r, gp_r, x, mesh=mesh)))
+    # and the sharded masked teacher matches the unsharded reference
+    np.testing.assert_allclose(
+        np.asarray(grouped_ensemble_logits(gs_q, gp_q, x, mesh=mesh)),
+        np.asarray(ensemble_logits(*split_clients(ref), x)), atol=2e-5)
+
+
+def test_heterogeneous_quarantine_float_equivalence(healthy):
+    """Removing a client that changes group first-occurrence order keeps
+    float-tolerance equivalence (bitwise is only pinned for
+    order-preserving drops)."""
+    data = _data()
+    scfg = dataclasses.replace(SCFG, client_kinds=("cnn1", "cnn2", "cnn1"))
+    clients, _ = build_federation(jax.random.PRNGKey(0), scfg, data)
+    scfg_f = dataclasses.replace(scfg, fault_plan=((0, "drop"),))
+    cq, _ = build_federation(jax.random.PRNGKey(0), scfg_f, data)
+    ref = [c for i, c in enumerate(clients) if i != 0]
+    x = _x()
+    lq = grouped_ensemble_logits(*stack_grouped(cq), x)
+    lr = grouped_ensemble_logits(*stack_grouped(ref), x)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lr), atol=1e-5)
+
+
+def test_fedavg_stacked_survivor_mask():
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    params = [cnn_init(jax.random.PRNGKey(i), spec) for i in range(3)]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *params)
+    mask = np.array([True, False, True])
+    got = fedavg_stacked(stacked, [10, 5, 20], survivor_mask=mask)
+    want = fedavg_stacked(
+        jax.tree.map(lambda *a: jnp.stack(a), params[0], params[2]),
+        [10, 20])
+    _leaves_equal(got, want)
+    # quarantined clients are exempt from the n_data positivity check
+    got2 = fedavg_stacked(stacked, [10, 0, 20], survivor_mask=mask)
+    _leaves_equal(got2, want)
+    with pytest.raises(ValueError):
+        fedavg_stacked(stacked, [10, 5, 20],
+                       survivor_mask=np.zeros(3, bool))
+
+
+# ------------------------------------------------- policies and quorum ---
+
+def test_strict_policy_raises(healthy):
+    data, _ = healthy
+    kind = CHAOS_KIND if CHAOS_KIND in ("nan", "inf", "drop") else "nan"
+    scfg = dataclasses.replace(SCFG, fault_plan=((1, kind),),
+                               upload_policy="strict")
+    if kind == "drop":
+        # a missing upload is not a *rejected* upload: strict only
+        # raises on admitted-then-failed screens; drop quarantines
+        cq, _ = build_federation(jax.random.PRNGKey(0), scfg, data)
+        assert cq.quarantined.keys() == {1}
+    else:
+        with pytest.raises(UploadError):
+            build_federation(jax.random.PRNGKey(0), scfg, data)
+
+
+def test_quorum_aborts_loudly(healthy):
+    data, _ = healthy
+    scfg = dataclasses.replace(SCFG, fault_plan=((0, "drop"), (1, "drop")),
+                               quorum=0.5)
+    with pytest.raises(QuorumError, match="quorum"):
+        build_federation(jax.random.PRNGKey(0), scfg, data)
+    # quorum=0.3 tolerates losing 2 of 3
+    cq, _ = build_federation(
+        jax.random.PRNGKey(0), dataclasses.replace(scfg, quorum=0.3), data)
+    assert int(cq.survivor_mask.sum()) == 1
+
+
+def test_norm_screen_catches_noise_not_signflip(healthy):
+    """The MAD norm screen flags a scaled-noise Byzantine upload in a
+    5-client cohort; a sign flip is norm-preserving and passes — the
+    documented detection gap."""
+    data = _data()
+    scfg5 = dataclasses.replace(SCFG, n_clients=5,
+                                client_kinds=("cnn1",) * 5, local_epochs=1,
+                                norm_screen=6.0)
+    noisy = dataclasses.replace(scfg5, fault_plan=((2, "noise", 50.0),))
+    cn, _ = build_federation(jax.random.PRNGKey(0), noisy, data)
+    assert 2 in cn.quarantined and "outlier" in cn.quarantined[2]
+    flipped = dataclasses.replace(scfg5, fault_plan=((2, "signflip"),))
+    cs, _ = build_federation(jax.random.PRNGKey(0), flipped, data)
+    assert cs.quarantined == {}
+
+
+def test_admission_policy_matrix(healthy):
+    """The CI chaos matrix entry point: inject CHAOS_KIND under
+    CHAOS_POLICY and assert the federation either heals (quarantine
+    masks out the victim; the DENSE round trains finite) or aborts
+    loudly (strict + a corrupt upload)."""
+    data, _ = healthy
+    scfg = dataclasses.replace(
+        SCFG, fault_plan=((2, CHAOS_KIND, 50.0),),
+        upload_policy=CHAOS_POLICY,
+        norm_screen=6.0 if CHAOS_KIND == "noise" else 0.0)
+    if CHAOS_POLICY == "strict" and CHAOS_KIND in ("nan", "inf"):
+        with pytest.raises(UploadError):
+            build_federation(jax.random.PRNGKey(0), scfg, data)
+        return
+    cq, _ = build_federation(jax.random.PRNGKey(0), scfg, data)
+    if CHAOS_KIND in ("drop", "delay", "nan", "inf"):
+        assert 2 in cq.quarantined
+    stu, _, _ = train_dense_server(jax.random.PRNGKey(3), cq, scfg)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(stu))
+
+
+# ----------------------------------------------- multiround fault carry ---
+
+@pytest.mark.slow
+def test_multiround_delay_carries_upload_forward():
+    """A round-0 delay fault withholds the upload and presents the stale
+    round-0 params as the round-1 upload; every round's ledger still has
+    one up event per client and the run stays finite."""
+    scfg = dataclasses.replace(
+        SCFG, n_clients=2, client_kinds=("cnn1",) * 2,
+        fault_plan=(Fault(client=1, kind="delay", round=0),), quorum=0.4)
+    data = _data(5, scfg)
+    led = CommLedger()
+    gp, spec, _ = dense_multi_round(jax.random.PRNGKey(6), scfg, data,
+                                    rounds=2, ledger=led)
+    kinds = {(e["who"], e["what"]): e["kind"] for e in led.events
+             if e["dir"] == "up"}
+    assert kinds[("client1", "round0-model-upload")] == "delayed"
+    assert kinds[("client1", "round1-model-upload")] == "delivered"
+    assert led.rounds == 2
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(gp))
+
+
+# ----------------------------------------------------- nan self-healing ---
+
+@pytest.mark.parametrize("policy", ["skip", "rollback"])
+def test_nan_policy_recovers_poisoned_epoch(healthy, policy):
+    """An injected non-finite loss epoch (NaN latent batch) does not
+    derail stage 2: the run completes with finite params, training
+    resumes with finite losses on the next epoch, and skip == rollback
+    to float tolerance (identical up to guard-recompilation noise)."""
+    data, fed = healthy
+    scfg = dataclasses.replace(SCFG, epochs=5, nan_policy=policy)
+    stu, gen, hist = train_dense_server(jax.random.PRNGKey(3),
+                                        fed["grouped"], scfg,
+                                        _poison_epochs=[2])
+    assert not np.isfinite(hist.dis_loss[2])          # fault was real
+    assert np.isfinite(hist.gen_loss[3]) and np.isfinite(hist.dis_loss[3])
+    for tree in (stu, gen):
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(tree))
+
+
+def test_nan_policy_raise_default(healthy):
+    data, fed = healthy
+    scfg = dataclasses.replace(SCFG, epochs=4)
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        train_dense_server(jax.random.PRNGKey(3), fed["grouped"], scfg,
+                           _poison_epochs=[1])
+    with pytest.raises(ValueError):
+        train_dense_server(
+            jax.random.PRNGKey(3), fed["grouped"],
+            dataclasses.replace(scfg, nan_policy="ostrich"))
+
+
+def test_nan_skip_matches_rollback(healthy):
+    data, fed = healthy
+    scfg = dataclasses.replace(SCFG, epochs=5)
+    s_skip, _, _ = train_dense_server(
+        jax.random.PRNGKey(3), fed["grouped"],
+        dataclasses.replace(scfg, nan_policy="skip"), _poison_epochs=[2])
+    s_roll, _, _ = train_dense_server(
+        jax.random.PRNGKey(3), fed["grouped"],
+        dataclasses.replace(scfg, nan_policy="rollback"),
+        _poison_epochs=[2])
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(s_skip), jax.tree.leaves(s_roll)))
+    assert diff < 1e-4
+
+
+# ------------------------------------------------------ mask plumbing ---
+
+def test_apply_group_masks_static_slicing():
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    params = [cnn_init(jax.random.PRNGKey(i), spec) for i in range(3)]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *params)
+    gspecs, gparams = apply_group_masks(
+        ((spec, 3),), [stacked], [np.array([True, False, True])])
+    assert gspecs == ((spec, 2),)
+    _leaves_equal(gparams[0],
+                  jax.tree.map(lambda *a: jnp.stack(a), params[0],
+                               params[2]))
+    # reduced-to-one group becomes a flat singleton
+    gspecs1, gparams1 = apply_group_masks(
+        ((spec, 3),), [stacked], [np.array([False, True, False])])
+    assert gspecs1 == ((spec, 1),)
+    _leaves_equal(gparams1[0], params[1])
+    with pytest.raises(ValueError):
+        apply_group_masks(((spec, 3),), [stacked],
+                          [np.array([False, False, False])])
+
+
+def test_admit_uploads_direct_quarantine_reasons():
+    """admit_uploads is callable outside build_federation: hand it a
+    federation with a NaN'd client and read the quarantine verdicts."""
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    from repro.core.ensemble import Client
+    clients = [Client(spec=spec,
+                      params=cnn_init(jax.random.PRNGKey(i), spec),
+                      n_data=10) for i in range(3)]
+    clients[1] = Client(spec=spec,
+                        params=jax.tree.map(
+                            lambda a: jnp.full_like(a, jnp.nan),
+                            clients[1].params), n_data=10)
+    out = admit_uploads(clients, upload_policy="quarantine", quorum=0.5)
+    assert out.quarantined.keys() == {1}
+    assert "non-finite" in out.quarantined[1]
+    assert list(out.survivor_mask) == [True, False, True]
+    # quarantined slot is zero-filled in the raw (unmasked) stack
+    raw = stack_grouped(out, apply_masks=False)
+    assert all(np.all(np.asarray(l)[1] == 0)
+               for l in jax.tree.leaves(raw[1][0]))
