@@ -147,7 +147,7 @@ RECORDS: list[dict] = []
 def emit(name: str, seconds: float, derived: str):
     """CSV contract: name,us_per_call,derived. Every record is also
     collected in RECORDS so run.py --json can write the machine-readable
-    trajectory file (BENCH_PR6.json)."""
+    trajectory file (BENCH_PR8.json)."""
     RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
                     "derived": derived})
     print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)

@@ -19,10 +19,12 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
   S   client-axis mesh sharding vs single-device grouped     [§Perf]
   R   robustness: accuracy + clients/sec vs dropout_frac,
       quarantine admission, checkpoint/resume overhead       [§Robust]
+  BK  backend execution-policy registry: registry-default vs
+      autotuned blocks per kernel pair, resolution overhead  [§Perf]
   ROOF roofline summary from dry-run artifacts               [§Roofline]
 
 ``--json PATH`` additionally writes every emitted record plus per-table
-medians as one machine-readable document (the BENCH_PR6.json perf
+medians as one machine-readable document (the BENCH_PR8.json perf
 trajectory artifact; scripts/tier1.sh writes it, CI uploads it and
 benchmarks/check_regression.py gates PRs on the per-series medians).
 """
@@ -142,23 +144,29 @@ def f3_local_vs_global(full: bool):
 
 def k_kernels(full: bool):
     """Kernel microbenches. time_call = warmup + median-of-N, so the
-    reported µs is steady-state runtime, not compile time."""
+    reported µs is steady-state runtime, not compile time. Block shapes
+    are pinned as explicit ExecPolicy overrides (configs/backend.py) so
+    the series stays comparable across autotune-cache changes;
+    kernel_vjp="autodiff" runs the bare forward kernels."""
+    from repro.configs.backend import resolve_exec_policy
     from repro.kernels import ops, ref
+    pol = resolve_exec_policy(None).replace(kernel_vjp="autodiff")
     key = jax.random.PRNGKey(0)
     B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
     q = jax.random.normal(key, (B, Hq, S, D))
     k = jax.random.normal(key, (B, Hkv, S, D))
     v = jax.random.normal(key, (B, Hkv, S, D))
-    dt = time_call(lambda: ops.flash_attention(q, k, v, block_q=64,
-                                               block_k=64))
-    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    p_fa = pol.override_blocks("flash_attention", block_q=64, block_k=64)
+    dt = time_call(lambda: ops.flash_attention(q, k, v, policy=p_fa))
+    o = ops.flash_attention(q, k, v, policy=p_fa)
     err = float(jnp.max(jnp.abs(o - ref.attention(q, k, v))))
     emit("k/flash_attention/256x64", dt, f"max_err={err:.2e};interpret=cpu")
 
     t_ = jax.random.normal(key, (64, 4096)) * 3
     s_ = jax.random.normal(jax.random.PRNGKey(1), (64, 4096)) * 3
-    dt = time_call(lambda: ops.distill_kl(t_, s_, 32, 1024))
-    r = ops.distill_kl(t_, s_, 32, 1024)
+    p_kl = pol.override_blocks("distill_kl", block_rows=32, block_v=1024)
+    dt = time_call(lambda: ops.distill_kl(t_, s_, policy=p_kl))
+    r = ops.distill_kl(t_, s_, policy=p_kl)
     err = float(jnp.max(jnp.abs(r - ref.distill_kl(t_, s_))))
     emit("k/distill_kl/64x4096", dt, f"max_err={err:.2e};interpret=cpu")
 
@@ -167,8 +175,9 @@ def k_kernels(full: bool):
     a = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
     b = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
     c = jax.random.normal(key, (1, 256, 1, 32)) * 0.3
-    dt = time_call(lambda: ops.ssd_scan(x, dt_in, a, b, c, chunk=64))
-    y, _ = ops.ssd_scan(x, dt_in, a, b, c, chunk=64)
+    p_ssd = pol.override_blocks("ssd_scan", chunk=64)
+    dt = time_call(lambda: ops.ssd_scan(x, dt_in, a, b, c, policy=p_ssd))
+    y, _ = ops.ssd_scan(x, dt_in, a, b, c, policy=p_ssd)
     y2, _ = ref.ssd(x, dt_in, a, b, c)
     err = float(jnp.max(jnp.abs(y - y2)))
     emit("k/ssd_scan/256x4x32", dt, f"max_err={err:.2e};interpret=cpu")
@@ -181,16 +190,19 @@ def kl_distill(full: bool):
     in interpret mode, so the µs columns measure the interpreter, not the
     Mosaic lowering — the trackable claims are the grad-equivalence error
     and the analytic peak-HBM residual bytes, which are backend-free."""
+    from repro.configs.backend import resolve_exec_policy
     from repro.kernels import ops, ref
     R, V = 64, 4096
     br, bv = 32, 1024
+    pol = resolve_exec_policy(None).override_blocks(
+        "distill_kl", block_rows=br, block_v=bv)
     t = jax.random.normal(jax.random.PRNGKey(0), (R, V)) * 3
     s = jax.random.normal(jax.random.PRNGKey(1), (R, V)) * 3
     g = jnp.ones((R,), jnp.float32) / R
     iters = 5 if full else 3
 
     f_ref = jax.jit(ref.distill_kl)
-    f_fus = jax.jit(lambda a, b: ops.distill_kl(a, b, br, bv))
+    f_fus = jax.jit(lambda a, b: ops.distill_kl(a, b, policy=pol))
 
     def fwdbwd(fwd):
         def run(a, b):
@@ -199,7 +211,7 @@ def kl_distill(full: bool):
         return jax.jit(run)
 
     fb_ref = fwdbwd(ref.distill_kl)
-    fb_fus = fwdbwd(lambda a, b: ops.distill_kl(a, b, br, bv))
+    fb_fus = fwdbwd(lambda a, b: ops.distill_kl(a, b, policy=pol))
 
     err_f = float(jnp.max(jnp.abs(f_fus(t, s) - f_ref(t, s))))
     (_, (dt_r, ds_r)), (_, (dt_k, ds_k)) = fb_ref(t, s), fb_fus(t, s)
@@ -233,9 +245,13 @@ def attn_flash(full: bool):
     table, the CPU µs columns measure the interpreter — the trackable
     claims are grad-equivalence error and the analytic fwd→bwd residual
     bytes, which are backend-free."""
+    from repro.configs.backend import resolve_exec_policy
     from repro.kernels import ops, ref
     B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
     bq = bk = 64
+    pol = resolve_exec_policy(None).replace(
+        kernel_vjp="fused").override_blocks(
+            "flash_attention", block_q=bq, block_k=bk)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, Hq, S, D))
     k = jax.random.normal(ks[1], (B, Hkv, S, D))
@@ -244,8 +260,8 @@ def attn_flash(full: bool):
     iters = 5 if full else 3
 
     f_ref = jax.jit(lambda a, b, c: ref.attention(a, b, c))
-    f_fus = jax.jit(lambda a, b, c: ops.flash_attention(
-        a, b, c, block_q=bq, block_k=bk, vjp_mode="fused"))
+    f_fus = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c,
+                                                        policy=pol))
 
     def fwdbwd(fwd):
         def run(a, b, c):
@@ -254,8 +270,8 @@ def attn_flash(full: bool):
         return jax.jit(run)
 
     fb_ref = fwdbwd(lambda a, b, c: ref.attention(a, b, c))
-    fb_fus = fwdbwd(lambda a, b, c: ops.flash_attention(
-        a, b, c, block_q=bq, block_k=bk, vjp_mode="fused"))
+    fb_fus = fwdbwd(lambda a, b, c: ops.flash_attention(a, b, c,
+                                                        policy=pol))
 
     err_f = float(jnp.max(jnp.abs(f_fus(q, k, v) - f_ref(q, k, v))))
     (_, gr), (_, gk) = fb_ref(q, k, v), fb_fus(q, k, v)
@@ -287,9 +303,12 @@ def ssd_table(full: bool):
     custom-VJP Pallas pair (kernels/ssd_scan, DESIGN.md §9). Same CPU
     caveat as attn/kl: µs measures the interpreter; grad error and
     residual bytes are the backend-free claims."""
+    from repro.configs.backend import resolve_exec_policy
     from repro.kernels import ops, ref
     B, S, H, P, G, N = 1, 256, 4, 32, 1, 32
     cl = 64
+    pol = resolve_exec_policy(None).replace(
+        kernel_vjp="fused").override_blocks("ssd_scan", chunk=cl)
     ks = jax.random.split(jax.random.PRNGKey(0), 7)
     x = jax.random.normal(ks[0], (B, S, H, P))
     dt_in = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
@@ -301,8 +320,7 @@ def ssd_table(full: bool):
     iters = 5 if full else 3
 
     f_ref = jax.jit(lambda *ar: ref.ssd(*ar))
-    f_fus = jax.jit(lambda *ar: ops.ssd_scan(*ar, chunk=cl,
-                                             vjp_mode="fused"))
+    f_fus = jax.jit(lambda *ar: ops.ssd_scan(*ar, policy=pol))
 
     def fwdbwd(fwd):
         def run(*ar):
@@ -311,8 +329,7 @@ def ssd_table(full: bool):
         return jax.jit(run)
 
     fb_ref = fwdbwd(lambda *ar: ref.ssd(*ar))
-    fb_fus = fwdbwd(lambda *ar: ops.ssd_scan(*ar, chunk=cl,
-                                             vjp_mode="fused"))
+    fb_fus = fwdbwd(lambda *ar: ops.ssd_scan(*ar, policy=pol))
 
     args = (x, dt_in, a, b, c)
     (y1, s1), (y2, s2) = f_ref(*args), f_fus(*args)
@@ -450,8 +467,8 @@ def c_client_training(full: bool):
     suite trains (image 8, width 0.25) — the per-step-fixed-cost /
     dispatch-dominated regime the grouped engine targets; at
     paper-scale widths on this 1-2-core CPU host both paths are
-    conv-FLOP-bound and converge (re-benchmark on an accelerator
-    backend, see ROADMAP). Reported derived values: µs per real
+    conv-FLOP-bound and converge (an accelerator backend changes the
+    regime — the backend registry, configs/backend.py, owns that flip). Reported derived values: µs per real
     optimizer step and whole-federation clients/sec."""
     from repro.data.pipeline import batches, build_batch_plan, pad_shards
     from repro.fl.client import make_grouped_local_update, make_local_step
@@ -605,6 +622,65 @@ def s_sharding(full: bool):
               f"sharded={sharded};speedup={t_one / t_sh:.2f}x"))
 
 
+def bk_backend(full: bool):
+    """BK: the backend execution-policy registry (configs/backend.py,
+    DESIGN.md §11). Per kernel pair, forward µs at the registry-default
+    block table vs the committed seed-cache autotuned blocks for a
+    shape whose bucket the seed actually tuned (the 512-dim buckets,
+    where the tuned choice differs from the table). Interpret-mode
+    timings on this shared CPU host are jittery, so the default vs
+    autotuned contrast is trajectory data, not a claim — the gateable
+    series are each column against its own history. Plus the
+    resolve_exec_policy overhead itself:
+    cold (memos dropped, cache-file stat + profile build) and warm
+    (memo hit) — warm is what every make_*_steps call pays."""
+    from repro.configs import backend as B
+    from repro.kernels import ops
+
+    scfg = base_cfg(full)
+    B.resolve_exec_policy(scfg)                     # prime the memo
+    for variant, prep in (("cold", B.clear_caches), ("warm", lambda: None)):
+        ts = []
+        for _ in range(50):
+            prep()
+            t0 = time.perf_counter()
+            B.resolve_exec_policy(scfg)
+            ts.append(time.perf_counter() - t0)
+        emit(f"bk/resolve/{variant}", float(np.median(ts)),
+             f"iters=50;backend={B.detect_backend(scfg)}")
+
+    pol = B.resolve_exec_policy(None).replace(kernel_vjp="autodiff")
+    key = jax.random.PRNGKey(0)
+    t_ = jax.random.normal(key, (512, 4096)) * 3
+    s_ = jax.random.normal(jax.random.PRNGKey(1), (512, 4096)) * 3
+    q = jax.random.normal(key, (1, 2, 512, 16))
+    x = jax.random.normal(key, (1, 512, 2, 8))
+    dt_in = jax.nn.softplus(jax.random.normal(key, (1, 512, 2)))
+    a = -jnp.exp(jax.random.normal(key, (2,)) * 0.3)
+    bm = jax.random.normal(key, (1, 512, 1, 8)) * 0.3
+    cases = (
+        ("distill_kl", (512, 4096),
+         lambda p: ops.distill_kl(t_, s_, policy=p)),
+        ("flash_attention", (512, 512),
+         lambda p: ops.flash_attention(q, q, q, policy=p)),
+        ("ssd_scan", (512,),
+         lambda p: ops.ssd_scan(x, dt_in, a, bm, bm, policy=p)),
+    )
+    iters = 3 if full else 2
+    for kernel, shape, call in cases:
+        names = B.KERNEL_BLOCK_ARGS[kernel]
+        default = pol.blocks_for(kernel)            # registry table
+        tuned = B.autotune_blocks(kernel, shape, pol)  # seed-cache hit
+        p_def = pol.override_blocks(kernel, **dict(zip(names, default)))
+        p_tun = pol.override_blocks(kernel, **dict(zip(names, tuned)))
+        t_def, t_tun = time_ab(call, (p_def,), call, (p_tun,),
+                               warmup=1, iters=iters)
+        sh = "x".join(str(d) for d in shape)
+        emit(f"bk/{kernel}/default/{sh}", t_def, f"blocks={default}")
+        emit(f"bk/{kernel}/autotuned/{sh}", t_tun,
+             f"blocks={tuned};speedup={t_def / t_tun:.2f}x")
+
+
 def r_roofline(full: bool):
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     files = sorted(glob.glob(os.path.join(
@@ -701,7 +777,7 @@ TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
           "attn": attn_flash, "ssd": ssd_table, "e": e_ensemble,
           "c": c_client_training, "s": s_sharding, "r": r_robustness,
-          "roof": r_roofline}
+          "bk": bk_backend, "roof": r_roofline}
 
 
 def main() -> None:
@@ -713,7 +789,7 @@ def main() -> None:
                     help="comma list of tables, e.g. t1,t6,k")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records + per-table medians as JSON "
-                         "(the BENCH_PR6.json trajectory artifact)")
+                         "(the BENCH_PR8.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)

@@ -87,19 +87,24 @@ class ArchConfig:
                                       # for long sequences (§Perf-1); False
                                       # reproduces the materialized baseline
     attn_block_q: int = 1024          # blockwise attention tile sizes
-    attn_block_kv: int = 1024
-    kernel_vjp_mode: str = "ref"      # attention/SSM kernel routing
+    attn_block_kv: int = 1024         # (also explicit flash_attention
+                                      # block overrides on the exec
+                                      # policy — configs/backend.py)
+    kernel_vjp_mode: str | None = None  # attention/SSM kernel routing
                                       # (kernels/ops.py, DESIGN.md §9):
                                       # "ref" (pure-XLA model paths,
-                                      # autodiff — CPU-host default),
-                                      # "autodiff" (bare Pallas forward
-                                      # kernels; NOT differentiable — the
-                                      # pallas_call JVP rule rejects
-                                      # them) or "fused" (the custom-VJP
-                                      # Pallas kernel pairs: streaming
-                                      # backward, the only differentiable
-                                      # kernel path. interpret-mode on
-                                      # CPU hosts, Mosaic on TPU).
+                                      # autodiff), "autodiff" (bare
+                                      # Pallas forward kernels; NOT
+                                      # differentiable — the pallas_call
+                                      # JVP rule rejects them) or
+                                      # "fused" (the custom-VJP Pallas
+                                      # kernel pairs: streaming
+                                      # backward, the only
+                                      # differentiable kernel path).
+                                      # None defers to the backend
+                                      # registry (configs/backend.py,
+                                      # DESIGN.md §11: cpu → "ref",
+                                      # gpu/tpu → "fused").
 
     def __post_init__(self):
         if self.head_dim == 0 and self.n_heads:

@@ -45,32 +45,49 @@ class DenseExperimentConfig:
     s_steps: int = 1                # student steps per epoch. 1 = Algorithm 1
                                     # verbatim; >1 draws fresh noise per step
                                     # (all baselines get the same budget).
-    loop_mode: str = "python"       # epoch driver: "python" (per-step jit,
-                                    # single-core-CPU default) or "fused"
-                                    # (device-resident lax.scan chunks —
-                                    # see core/dense.py).
+    # Execution-mode knobs. None (the default) defers to the backend
+    # execution-policy registry (configs/backend.py, DESIGN.md §11),
+    # which picks per-backend defaults (cpu: python/ref; gpu/tpu:
+    # fused/fused) — set a knob to pin a mode regardless of backend.
+    # Resolution happens ONLY through
+    # ``configs.backend.resolve_exec_policy(scfg)``.
+    backend: str | None = None      # "cpu" | "gpu" | "tpu"; None →
+                                    # REPRO_BACKEND env, then
+                                    # jax.default_backend().
+    loop_mode: str | None = None    # epoch driver: "python" (per-step
+                                    # jit) or "fused" (device-resident
+                                    # lax.scan chunks — core/dense.py).
     loop_chunk: int = 8             # epochs per fused scan program
-    client_loop_mode: str = "grouped"  # LocalUpdate driver: "grouped"
+    client_loop_mode: str | None = None  # LocalUpdate driver: "grouped"
                                     # (one vmapped+scanned program per
                                     # architecture group — fl/federation)
                                     # or "python" (per-client reference
                                     # loop; equivalence ground truth).
-    ensemble_shard_mode: str = "none"  # stacked-client-axis placement:
-                                    # "none" (single-device default) or
-                                    # "clients" (shard the leading client
-                                    # dim of every stacked computation —
-                                    # local training AND the ensemble
-                                    # teacher — over the ("clients",
-                                    # "data") mesh; fl/sharding.py,
-                                    # DESIGN.md §8).
-    distill_kl_mode: str = "ref"    # stage-2 KL implementation: "ref"
-                                    # (materialized jnp log-softmax +
-                                    # autodiff — CPU default) or "fused"
-                                    # (Pallas custom-VJP kernel pair
-                                    # streaming vocab blocks in both
-                                    # passes; kernels/distill_kl,
-                                    # DESIGN.md §9. interpret-mode on
-                                    # CPU hosts, Mosaic on TPU).
+    ensemble_shard_mode: str | None = None  # stacked-client-axis
+                                    # placement: "none" (single-device)
+                                    # or "clients" (shard the leading
+                                    # client dim of every stacked
+                                    # computation — local training AND
+                                    # the ensemble teacher — over the
+                                    # ("clients", "data") mesh;
+                                    # fl/sharding.py, DESIGN.md §8).
+                                    # Registry default is "none" on
+                                    # every backend: sharding is a
+                                    # topology choice, not a backend
+                                    # choice.
+    distill_kl_mode: str | None = None  # stage-2 KL implementation:
+                                    # "ref" (materialized jnp
+                                    # log-softmax + autodiff) or
+                                    # "fused" (Pallas custom-VJP kernel
+                                    # pair streaming vocab blocks in
+                                    # both passes; kernels/distill_kl,
+                                    # DESIGN.md §9).
+    kernel_blocks: tuple = ()       # explicit per-kernel block-shape
+                                    # overrides, e.g.
+                                    # (("distill_kl", (128, 1024)),);
+                                    # unset kernels use the registry
+                                    # table / autotuner cache
+                                    # (configs/backend.py).
 
     # fault tolerance (DESIGN.md §10) — injection knobs (fl/faults.py):
     fault_plan: tuple = ()          # explicit per-client faults, entries

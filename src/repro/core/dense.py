@@ -19,9 +19,11 @@ The frozen ensemble is held in the grouped-vmap representation
 vmapped forward, so the per-step ensemble cost is O(#architectures), not
 O(#clients).
 
-The epoch driver is selected by ``scfg.loop_mode``:
+The epoch driver is selected by the resolved execution policy
+(``configs.backend.resolve_exec_policy``; ``scfg.loop_mode`` when set,
+else the backend registry default — cpu: "python", gpu/tpu: "fused"):
 
-  * ``"python"`` (default) — per-step jit, one host sync (``float``) per
+  * ``"python"`` — per-step jit, one host sync (``float``) per
     metric per epoch. Fastest on single-core CPU hosts where the fused
     scan compiles slowly.
   * ``"fused"``  — device-resident: ``scfg.loop_chunk`` epochs are chunked
@@ -45,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.backend import resolve_exec_policy
 from repro.core import generator as G
 from repro.core import losses as LS
 from repro.core.ensemble import (Client, grouped_ensemble_logits,
@@ -90,15 +93,18 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
 
     use_bn / use_div=False reproduce the paper's ablations (Table 6).
     """
+    # ALL execution modes resolve through the backend registry
+    # (configs.backend.resolve_exec_policy, DESIGN.md §11): scfg knobs
+    # when set, per-backend defaults otherwise. The stage-2 KL
+    # implementation ("ref" jnp autodiff vs "fused" Pallas custom-VJP
+    # kernel pair — kernels/distill_kl, DESIGN.md §9) routes both the
+    # student's L_dis and the generator's L_div, so the fused dL/dt
+    # stream is reused in stage 1.
+    pol = resolve_exec_policy(scfg)
     if mesh is None:
         from repro.fl.sharding import resolve_mesh
-        mesh = resolve_mesh(scfg)
-    # stage-2 KL implementation: "ref" (jnp autodiff, CPU default) or
-    # "fused" (Pallas custom-VJP kernel pair — kernels/distill_kl,
-    # DESIGN.md §9); both the student's L_dis and the generator's L_div
-    # route through it, so the fused dL/dt stream is reused in stage 1
-    kl_mode = getattr(scfg, "distill_kl_mode", "ref")
-    LS.check_mode(kl_mode)
+        mesh = resolve_mesh(pol)
+    kl_mode = pol.distill_kl
     # nan_policy="skip" compiles an isfinite guard into BOTH steps: a
     # non-finite loss (or grad) step becomes a no-op update via
     # jnp.where over the param/opt-state trees. Any other policy
@@ -129,8 +135,8 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
             stu = cnn_logits(stu_p, student_spec, x)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats) if use_bn else jnp.zeros(())
-            l_div = LS.div_loss(avg, stu, mode=kl_mode) if use_div \
-                else jnp.zeros(())
+            l_div = LS.div_loss(avg, stu, mode=kl_mode, policy=pol) \
+                if use_div else jnp.zeros(())
             total = l_ce + scfg.lambda_bn * l_bn + scfg.lambda_div * l_div
             return total, {"ce": l_ce, "bn": l_bn, "div": l_div}
 
@@ -153,7 +159,8 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)
             # avg is stop-gradient'd upstream: skip the fused dL/dt stream
             return LS.distill_loss(avg, logits, mode=kl_mode,
-                                   with_teacher_grad=False), new_sp
+                                   with_teacher_grad=False,
+                                   policy=pol), new_sp
 
         (loss, stats_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(stu_p)
         new_p, new_state = s_opt.update(grads, s_state, stu_p)
@@ -255,9 +262,12 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
                        _poison_epochs=(), _stop_after_epoch: int = 0):
     """Run Algorithm 1. Returns (student_params, gen_params, history).
 
-    scfg.loop_mode selects the epoch driver ("python" per-step jit —
-    the CPU default — or "fused" device-resident chunks of
-    scfg.loop_chunk epochs; see module docstring).
+    Execution modes resolve through the backend registry
+    (configs.backend.resolve_exec_policy, DESIGN.md §11): scfg knobs
+    when set, per-backend defaults otherwise.
+    loop_mode selects the epoch driver ("python" per-step jit or
+    "fused" device-resident chunks of scfg.loop_chunk epochs; see
+    module docstring).
     scfg.ensemble_shard_mode="clients" additionally shards the frozen
     client stack over a ("clients", "data") mesh (fl/sharding.py) — a
     pure placement/lowering choice, same math (DESIGN.md §8).
@@ -335,7 +345,7 @@ def train_dense_server(key, clients: Sequence[Client], scfg,
 
     hist = DenseHistory()
     s_steps = getattr(scfg, "s_steps", 1)
-    loop_mode = getattr(scfg, "loop_mode", "python")
+    loop_mode = resolve_exec_policy(scfg).loop
     loop_chunk = max(1, int(getattr(scfg, "loop_chunk", 8)))
     poison = frozenset(_poison_epochs or ())
     # both drivers consume the SAME per-epoch key stream so they are

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
+from repro.configs import backend as B
 from repro.configs.base import ArchConfig
 from repro.core import generator as G
 from repro.core import losses as LS
@@ -105,10 +106,15 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
                          g_lr: float = 1e-3, s_lr: float = 1e-4,
                          lambda_bn: float = 1.0, lambda_div: float = 0.5,
                          mesh=None, dp_axes=(),
-                         distill_kl_mode: str = "ref",
-                         kernel_vjp_mode: str = "ref"):
+                         distill_kl_mode: str | None = None,
+                         kernel_vjp_mode: str | None = None,
+                         policy=None):
     """Jitted (gen_step, student_step) for a heterogeneous LM federation
     (host/smoke scale; the pod-sharded path is make_pod_distill_step).
+
+    Both modes default to the backend execution-policy registry
+    (``policy``, or ``configs.backend.resolve_exec_policy(None)`` —
+    DESIGN.md §11); explicit arguments pin them.
 
     distill_kl_mode: "ref" or "fused" — both L_dis and L_div route
     through losses.softmax_kl, so "fused" streams the (tokens, V) KL and
@@ -121,6 +127,11 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
     student_step AND the generator gradients that flow through the
     client/student forwards in gen_step."""
     from repro.kernels import ops as kops
+    pol = B.resolve_exec_policy(policy)
+    distill_kl_mode = pol.distill_kl if distill_kl_mode is None \
+        else distill_kl_mode
+    kernel_vjp_mode = pol.kernel_vjp if kernel_vjp_mode is None \
+        else kernel_vjp_mode
     LS.check_mode(distill_kl_mode)
     kops.check_kernel_vjp_mode(kernel_vjp_mode)
     _reject_autodiff_mode(kernel_vjp_mode)
@@ -143,7 +154,8 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
             sf = stu.astype(jnp.float32).reshape(-1, V)
             l_ce = LS.ce_loss(af, y.reshape(-1))
             l_bn = embed_stats_loss(client_cfgs, cparams, embeds)
-            l_div = LS.div_loss(af, sf, mode=distill_kl_mode)
+            l_div = LS.div_loss(af, sf, mode=distill_kl_mode,
+                                 policy=pol)
             return l_ce + lambda_bn * l_bn + lambda_div * l_div, \
                 {"ce": l_ce, "bn": l_bn, "div": l_div}
 
@@ -163,7 +175,7 @@ def make_llm_dense_steps(student_cfg: ArchConfig,
             return LS.distill_loss(avg.reshape(-1, V),
                                    stu.astype(jnp.float32).reshape(-1, V),
                                    mode=distill_kl_mode,
-                                   with_teacher_grad=False)
+                                   with_teacher_grad=False, policy=pol)
 
         loss, grads = jax.value_and_grad(loss_fn)(stu_p)
         new_p, new_s = s_opt.update(grads, s_state, stu_p)
@@ -188,8 +200,10 @@ def pod_stack_specs(param_specs_tree, mesh):
 
 def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
                           s_lr: float = 1e-4, chunked_kl: bool = False,
-                          kl_chunk: int = 64, distill_kl_mode: str = "ref",
-                          kernel_vjp_mode: str = "ref"):
+                          kl_chunk: int = 64,
+                          distill_kl_mode: str | None = None,
+                          kernel_vjp_mode: str | None = None,
+                          policy=None):
     """The paper-representative production cell: DENSE stage-2 distillation
     with a homogeneous client stack vmapped over a leading ensemble dim.
 
@@ -214,8 +228,16 @@ def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
     student's blocks through the streaming custom-VJP kernel pairs —
     at LLM scale this removes the O(S²) softmax / per-chunk state
     rematerialization that backprop through the XLA forward keeps alive.
+
+    Both modes default to the backend execution-policy registry
+    (``policy``, DESIGN.md §11); explicit arguments pin them.
     """
     from repro.kernels import ops as kops
+    pol = B.resolve_exec_policy(policy)
+    distill_kl_mode = pol.distill_kl if distill_kl_mode is None \
+        else distill_kl_mode
+    kernel_vjp_mode = pol.kernel_vjp if kernel_vjp_mode is None \
+        else kernel_vjp_mode
     LS.check_mode(distill_kl_mode)
     kops.check_kernel_vjp_mode(kernel_vjp_mode)
     _reject_autodiff_mode(kernel_vjp_mode)
@@ -241,7 +263,7 @@ def make_pod_distill_step(cfg: ArchConfig, mesh, *, n_clients: int,
         return LS.distill_loss(avg.reshape(-1, V),
                                stu.astype(jnp.float32).reshape(-1, V),
                                mode=distill_kl_mode,
-                               with_teacher_grad=False)
+                               with_teacher_grad=False, policy=pol)
 
     def loss_chunked(sp, stacked_client_params, embeds):
         th = jax.lax.stop_gradient(

@@ -8,48 +8,53 @@
   L_dis (Eq. 6)  distillation    — KL(D(x̂) ‖ f_S(x̂))
 
 Every KL-based loss takes ``mode``: ``"ref"`` (materialized jnp
-log-softmax, differentiated by autodiff — the CPU-fast default) or
-``"fused"`` (the Pallas custom-VJP kernel pair, kernels/distill_kl —
-streams vocab blocks in BOTH directions, never materializing an (R, V)
-softmax; DESIGN.md §9). Routed per-config by ``scfg.distill_kl_mode``.
-``with_teacher_grad=False`` lets stop-gradient'd-teacher call sites
-(stage 2's student step) skip the fused dL/dt stream.
+log-softmax, differentiated by autodiff) or ``"fused"`` (the Pallas
+custom-VJP kernel pair, kernels/distill_kl — streams vocab blocks in
+BOTH directions, never materializing an (R, V) softmax; DESIGN.md §9).
+The per-run choice and the kernel's block shapes come from the backend
+execution-policy registry (``configs.backend.resolve_exec_policy``,
+DESIGN.md §11); callers pass ``mode=policy.distill_kl`` and optionally
+the policy itself. ``with_teacher_grad=False`` lets
+stop-gradient'd-teacher call sites (stage 2's student step) skip the
+fused dL/dt stream.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-KL_MODES = ("ref", "fused")
+from repro.configs import backend as _B
 
+KL_MODES = _B.KL_MODES
 
-def check_mode(mode: str) -> None:
-    """Fail fast on an unknown distill_kl mode — part of the public
-    contract (dense.py / dense_llm.py validate at step-build time, before
-    anything jits)."""
-    if mode not in KL_MODES:
-        raise ValueError(f"unknown distill_kl mode {mode!r} "
-                         f"(expected one of {KL_MODES})")
+# re-export: step builders still validate through losses.check_mode
+check_mode = _B.check_kl_mode
 
 
 def softmax_kl(p_logits: jnp.ndarray, q_logits: jnp.ndarray,
                temperature: float = 1.0, *, mode: str = "ref",
-               block_rows: int = 256, block_v: int = 2048,
-               with_teacher_grad: bool = True) -> jnp.ndarray:
+               block_rows: int | None = None, block_v: int | None = None,
+               with_teacher_grad: bool = True, policy=None) -> jnp.ndarray:
     """Per-sample KL( softmax(p/T) ‖ softmax(q/T) ), shape (B,).
 
     Temperature scaling stays OUTSIDE the fused kernel: the 1/T chain
     rule flows through the scaling op, so both modes share it. Like the
     ref path, any leading batch shape is accepted (the kernel sees the
-    flattened (rows, V) view)."""
+    flattened (rows, V) view). Explicit ``block_rows``/``block_v``
+    override the policy's (registry/autotuned) choice."""
     check_mode(mode)
     pt = p_logits.astype(jnp.float32) / temperature
     qt = q_logits.astype(jnp.float32) / temperature
     if mode == "fused":
         from repro.kernels import ops as kops
+        pol = _B.resolve_exec_policy(policy)
+        if block_rows is not None or block_v is not None:
+            pol = pol.override_blocks("distill_kl", block_rows=block_rows,
+                                      block_v=block_v)
         lead, v = pt.shape[:-1], pt.shape[-1]
         kl = kops.distill_kl(pt.reshape(-1, v), qt.reshape(-1, v),
-                             block_rows, block_v, None, with_teacher_grad)
+                             with_teacher_grad=with_teacher_grad,
+                             policy=pol)
         return kl.reshape(lead)
     logp = jax.nn.log_softmax(pt, axis=-1)
     logq = jax.nn.log_softmax(qt, axis=-1)
@@ -73,7 +78,8 @@ def bn_loss(per_client_stats) -> jnp.ndarray:
 
 
 def div_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
-             temperature: float = 1.0, *, mode: str = "ref") -> jnp.ndarray:
+             temperature: float = 1.0, *, mode: str = "ref",
+             policy=None) -> jnp.ndarray:
     """Eq. (4): −ω·KL(D‖f_S); ω = 1[argmax D ≠ argmax f_S].
 
     Returned value is the loss to *minimize* (already negated); gradients
@@ -82,27 +88,30 @@ def div_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
     """
     omega = (jnp.argmax(avg_logits, -1)
              != jnp.argmax(student_logits, -1)).astype(jnp.float32)
-    kl = softmax_kl(avg_logits, student_logits, temperature, mode=mode)
+    kl = softmax_kl(avg_logits, student_logits, temperature, mode=mode,
+                    policy=policy)
     return -jnp.mean(omega * kl)
 
 
 def gen_loss(avg_logits, labels, per_client_stats, student_logits, *,
-             lambda_bn: float, lambda_div: float, mode: str = "ref"):
+             lambda_bn: float, lambda_div: float, mode: str = "ref",
+             policy=None):
     """Eq. (5). Returns (total, dict of parts)."""
     l_ce = ce_loss(avg_logits, labels)
     l_bn = bn_loss(per_client_stats)
-    l_div = div_loss(avg_logits, student_logits, mode=mode)
+    l_div = div_loss(avg_logits, student_logits, mode=mode, policy=policy)
     total = l_ce + lambda_bn * l_bn + lambda_div * l_div
     return total, {"ce": l_ce, "bn": l_bn, "div": l_div}
 
 
 def distill_loss(avg_logits: jnp.ndarray, student_logits: jnp.ndarray,
                  temperature: float = 1.0, *, mode: str = "ref",
-                 with_teacher_grad: bool = True) -> jnp.ndarray:
+                 with_teacher_grad: bool = True, policy=None) -> jnp.ndarray:
     """Eq. (6): mean_b KL(D(x̂) ‖ f_S(x̂)).
 
     Student steps pass ``with_teacher_grad=False`` (the teacher is
     stop-gradient'd upstream) so the fused backward skips its dL/dt
     stream; the default stays gradient-complete for any other caller."""
     return jnp.mean(softmax_kl(avg_logits, student_logits, temperature,
-                               mode=mode, with_teacher_grad=with_teacher_grad))
+                               mode=mode, with_teacher_grad=with_teacher_grad,
+                               policy=policy))

@@ -185,7 +185,7 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
                          momentum: float = 0.9, use_ldam: bool = False,
                          num_classes: int = 10,
                          class_counts: np.ndarray | None = None,
-                         mesh=None):
+                         mesh=None, policy=None):
     """Train m same-spec clients as one compiled program.
 
     stacked_params: client params stacked on a leading axis (DONATED —
@@ -193,7 +193,10 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
     BatchPlan. class_counts (m, num_classes): real per-shard label counts
     (required for LDAM margins; also returned in info).
 
-    mesh: optional ("clients", "data") mesh (fl/sharding.py). When the
+    mesh: optional ("clients", "data") mesh (fl/sharding.py); when not
+    given it is resolved from ``policy`` (an ExecPolicy from
+    ``configs.backend.resolve_exec_policy`` — its ``ensemble_shard``
+    mode routes the mesh exactly like the raw-scfg path). When the
     ``clients`` axis divides m, every leading-client-axis tensor — param
     and momentum carries, padded shards, the BatchPlan, margins — is
     placed client-sharded before the scan, so the whole local phase runs
@@ -204,6 +207,9 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
     Returns (stacked_params, info) mirroring ``local_update``'s contract,
     with info["loss"] of shape (steps, m) as a device array.
     """
+    if mesh is None and policy is not None:
+        from repro.fl.sharding import resolve_mesh
+        mesh = resolve_mesh(policy)
     m = plan.idx.shape[0]
     if class_counts is None:
         # real shard sizes recoverable from the plan: each sample appears

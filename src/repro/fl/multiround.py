@@ -37,14 +37,13 @@ def dense_multi_round(key, scfg, data, *, rounds: int,
     round-(r+1) upload, quarantined clients are survivor-masked out of
     that round's server ensemble, and the broadcast still reaches every
     client (the server can't know who will fault next round)."""
+    from repro.configs.backend import resolve_exec_policy
     from repro.fl.faults import apply_upload_faults, build_fault_plan
     from repro.fl.protocol import admit_uploads
     from repro.fl.sharding import resolve_mesh
-    mode = getattr(scfg, "client_loop_mode", "grouped")
-    if mode not in ("python", "grouped"):
-        raise ValueError(f"unknown client_loop_mode {mode!r} "
-                         "(expected 'python' or 'grouped')")
-    mesh = resolve_mesh(scfg)
+    pol = resolve_exec_policy(scfg)
+    mode = pol.client_loop
+    mesh = resolve_mesh(pol)
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     shards = [(x[idx], y[idx]) for idx in parts] if mode == "grouped" \

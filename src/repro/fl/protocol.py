@@ -288,10 +288,12 @@ def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
 
     Returns (clients, shards) where shards[i] = (x_i, y_i).
 
-    ``scfg.client_loop_mode`` selects the LocalUpdate driver (mirroring
-    ``scfg.loop_mode`` for the server loop):
+    The resolved execution policy (configs.backend.resolve_exec_policy;
+    ``scfg.client_loop_mode`` when set) selects the LocalUpdate driver
+    (mirroring the server loop's loop mode):
 
-      * ``"grouped"`` (default) — the fl/federation.py engine: clients
+      * ``"grouped"`` (the registry default on every backend) — the
+        fl/federation.py engine: clients
         are grouped by architecture and each group trains as ONE
         vmapped+scanned program; the returned ``ClientList`` carries the
         stacked params straight into ``core.ensemble.stack_grouped``.
@@ -316,17 +318,15 @@ def build_federation(key, scfg, data, *, ledger: CommLedger | None = None,
     faulty = bool(plan) or bool(pending)
     train_ledger = None if faulty else ledger
 
-    mode = getattr(scfg, "client_loop_mode", "grouped")
+    from repro.configs.backend import resolve_exec_policy
+    mode = resolve_exec_policy(scfg).client_loop
     if mode == "grouped":
         from repro.fl.federation import build_grouped_federation
         clients, shards = build_grouped_federation(
             key, scfg, data, ledger=train_ledger, seed=seed)
-    elif mode == "python":
+    else:
         clients, shards = _build_python_federation(
             key, scfg, data, ledger=train_ledger, seed=seed)
-    else:
-        raise ValueError(f"unknown client_loop_mode {mode!r} "
-                         "(expected 'python' or 'grouped')")
 
     if not faulty:
         if return_faults:

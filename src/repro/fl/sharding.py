@@ -35,23 +35,23 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.configs.backend import SHARD_MODES, resolve_exec_policy
 from repro.launch.mesh import make_client_mesh
 
 CLIENT_AXIS = "clients"
 
-SHARD_MODES = ("none", "clients")
-
 
 def resolve_mesh(scfg):
-    """Mesh routing for the CNN-scale host path: None (single-device,
-    the default) or the ("clients", "data") host mesh."""
-    mode = getattr(scfg, "ensemble_shard_mode", "none")
+    """Mesh routing for the CNN-scale host path: None (single-device)
+    or the ("clients", "data") host mesh. ``scfg`` may be a config, an
+    already-resolved ExecPolicy, or None — the shard mode comes from the
+    backend execution-policy registry (configs/backend.py, DESIGN.md
+    §11; "none" on every backend unless ``scfg.ensemble_shard_mode``
+    opts in)."""
+    mode = resolve_exec_policy(scfg).ensemble_shard
     if mode == "none":
         return None
-    if mode == "clients":
-        return make_client_mesh()
-    raise ValueError(f"unknown ensemble_shard_mode {mode!r} "
-                     f"(expected one of {SHARD_MODES})")
+    return make_client_mesh()
 
 
 def client_axis_size(mesh) -> int:

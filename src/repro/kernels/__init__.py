@@ -15,10 +15,13 @@ statistics as residuals, plus streaming backward kernels —
                     backward re-streams vocab blocks from online-LSE
                     stats
 
-flash_attention/ssd_scan are routed by ``vjp_mode`` (ops.py /
-``scfg.kernel_vjp_mode``): "ref" oracle, "autodiff" bare forward kernel
-(not differentiable — jax's pallas_call JVP rule rejects the kernels),
-"fused" custom-VJP pair.
+flash_attention/ssd_scan are routed by the execution policy's
+``kernel_vjp`` mode (ops.py; configs/backend.py, DESIGN.md §11 — the
+backend registry picks the default, ``ArchConfig.kernel_vjp_mode`` pins
+it): "ref" oracle, "autodiff" bare forward kernel (not differentiable —
+jax's pallas_call JVP rule rejects the kernels), "fused" custom-VJP
+pair. Block shapes and interpret-mode come from the same policy
+(registry table + autotuner cache).
 """
 from repro.kernels.ops import (flash_attention, ssd_scan, distill_kl,
                                distill_kl_mean, check_kernel_vjp_mode,

@@ -109,8 +109,8 @@ def _blocking(R: int, V: int, block_rows: int, block_v: int):
     return br, bv, nr, nv, (V % bv) != 0
 
 
-def distill_kl(teacher_logits, student_logits, *, block_rows: int = 256,
-               block_v: int = 2048, interpret: bool = False,
+def distill_kl(teacher_logits, student_logits, *, block_rows: int,
+               block_v: int, interpret: bool = False,
                return_stats: bool = False):
     """(R, V) x (R, V) -> per-row KL (R,) float32.
 
@@ -167,7 +167,7 @@ def _kl_bwd_kernel(t_ref, s_ref, lt_ref, ls_ref, kl_ref, g_ref, *out_refs,
 
 
 def distill_kl_bwd(teacher_logits, student_logits, lse_t, lse_s, kl, g, *,
-                   block_rows: int = 256, block_v: int = 2048,
+                   block_rows: int, block_v: int,
                    interpret: bool = False, with_teacher_grad: bool = True):
     """Stream the KL gradients from per-row stats: returns (dt, ds); dt is
     None when with_teacher_grad=False (the dL/dt stream is skipped
@@ -202,8 +202,8 @@ def distill_kl_bwd(teacher_logits, student_logits, lse_t, lse_s, kl, g, *,
 # ------------------------------------------------------------ custom VJP --
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def distill_kl_vjp(teacher_logits, student_logits, block_rows=256,
-                   block_v=2048, interpret=False, with_teacher_grad=True):
+def distill_kl_vjp(teacher_logits, student_logits, block_rows, block_v,
+                   interpret=False, with_teacher_grad=True):
     """distill_kl with the fused Pallas backward (DESIGN.md §9).
 
     Residual contract: only the inputs (alive anyway) and the per-row

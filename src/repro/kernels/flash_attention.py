@@ -187,8 +187,8 @@ def _fwd_flat(qf, kf, vf, *, Hq, Hkv, causal, window, scale, block_q,
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False,
+                    scale: float | None = None, block_q: int,
+                    block_k: int, interpret: bool = False,
                     return_stats: bool = False):
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
 
@@ -310,7 +310,7 @@ def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
 
 def flash_attention_bwd(q, k, v, o_f32, lse, do, *, causal: bool = True,
                         window: int = 0, scale: float | None = None,
-                        block_q: int = 128, block_k: int = 128,
+                        block_q: int, block_k: int,
                         interpret: bool = False):
     """Stream the attention gradients from per-row stats: (dq, dk, dv).
 
@@ -394,8 +394,8 @@ def flash_attention_bwd(q, k, v, o_f32, lse, do, *, causal: bool = True,
 # ------------------------------------------------------------ custom VJP --
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def flash_attention_vjp(q, k, v, causal=True, window=0, scale=None,
-                        block_q=128, block_k=128, interpret=False):
+def flash_attention_vjp(q, k, v, causal, window, scale,
+                        block_q, block_k, interpret=False):
     """flash_attention with the streaming Pallas backward (DESIGN.md §9).
 
     Residual contract: only the inputs (alive anyway), the f32 output and

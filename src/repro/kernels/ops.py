@@ -1,9 +1,21 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels, routed by ExecPolicy.
 
-On CPU (this container) kernels run with ``interpret=True`` (Pallas
-executes the kernel body in Python) — correctness-validated against the
-``ref.py`` oracles; on TPU they compile to Mosaic. ``interpret`` defaults
-to auto-detection of the backend.
+Execution-mode and block-shape selection live in the backend registry
+(configs/backend.py, DESIGN.md §11): every wrapper takes ``policy=`` (an
+``ExecPolicy``; None resolves registry defaults for the detected
+backend). Interpret-mode comes from the registry too — cpu → True
+(Pallas executes the kernel body in Python, correctness-validated
+against the ``ref.py`` oracles), gpu/tpu → False (compiled), overridable
+via ``REPRO_INTERPRET``. The old ``_auto_interpret`` helper special-cased
+only tpu, so a gpu backend silently ran every kernel interpreted; the
+registry route fixes that.
+
+The old ``interpret=`` / ``block_*=`` / ``vjp_mode=`` kwargs keep
+working through a deprecation shim: passing any of them emits a
+``DeprecationWarning`` and maps them onto the resolved policy as
+explicit overrides. Bare legacy calls keep their historical defaults
+(``vjp_mode="autodiff"`` for flash_attention/ssd_scan), so pre-registry
+callers see unchanged behavior.
 
 Every differentiated kernel is a custom-VJP kernel *pair* (DESIGN.md §9):
 the forward streams blocks with online accumulators and persists only
@@ -21,100 +33,161 @@ softmax / state-history intermediate in HBM in either direction.
   * ``ssd_scan``       — per-chunk carried states; the backward walks
     the chunks in reverse carrying the state cotangent.
 
-``vjp_mode`` routes flash_attention/ssd_scan (``scfg.kernel_vjp_mode``,
-mirroring ``distill_kl_mode``):
+``policy.kernel_vjp`` routes flash_attention/ssd_scan (resolved from
+``ArchConfig.kernel_vjp_mode`` by ``configs.backend.arch_policy``,
+mirroring the distill-KL mode):
 
   * ``"ref"``      — the pure-jnp oracle (materialized softmax /
-    sequential recurrence), differentiated by jax autodiff. CPU-host
-    default at the model layer.
+    sequential recurrence), differentiated by jax autodiff. The cpu
+    registry default.
   * ``"autodiff"`` — the forward Pallas kernel alone. Forward-only in
     practice: jax's pallas_call JVP rule rejects ``pl.program_id``
     bodies, so differentiating this path raises — kept as the
     no-gradient serving route and as documentation of WHY the kernel
     pairs exist.
   * ``"fused"``    — the custom-VJP kernel pair (the only differentiable
-    kernel path).
+    kernel path; the gpu/tpu registry default).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs import backend as B
 from repro.kernels import flash_attention as _fa
 from repro.kernels import distill_kl as _kl
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
 
-KERNEL_VJP_MODES = ("ref", "autodiff", "fused")
+KERNEL_VJP_MODES = B.KERNEL_VJP_MODES
+check_kernel_vjp_mode = B.check_kernel_vjp_mode
 
 
-def check_kernel_vjp_mode(mode: str) -> None:
-    """Fail fast on an unknown kernel_vjp_mode — part of the public
-    contract (model applies and the dense_llm step builders validate at
-    build time, before anything jits)."""
-    if mode not in KERNEL_VJP_MODES:
-        raise ValueError(f"unknown kernel_vjp mode {mode!r} "
-                         f"(expected one of {KERNEL_VJP_MODES})")
+def _route(kernel, policy, legacy_blocks, interpret, vjp_mode, shape):
+    """Resolve (blocks, interpret, vjp_mode) for one call.
 
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+    Pure-policy calls take everything from the registry resolution
+    (autotuned blocks when enabled). Legacy kwargs emit a
+    DeprecationWarning and overlay the policy: explicitly-passed blocks
+    and interpret win; an unpassed legacy ``vjp_mode`` keeps the
+    historical ``"autodiff"`` default (NOT the registry mode) so
+    pre-registry call sites keep their exact semantics.
+    """
+    legacy = interpret is not None or vjp_mode is not None \
+        or any(v is not None for v in legacy_blocks.values())
+    pol = B.resolve_exec_policy(policy)
+    if legacy:
+        warnings.warn(
+            f"{kernel}: interpret=/vjp_mode=/block kwargs are deprecated; "
+            "pass policy=configs.backend.resolve_exec_policy(scfg) (or an "
+            "explicit ExecPolicy) instead", DeprecationWarning,
+            stacklevel=3)
+        named = {n: v for n, v in legacy_blocks.items() if v is not None}
+        if named:
+            pol = pol.override_blocks(kernel, **named)
+        if interpret is not None:
+            pol = pol.replace(interpret=bool(interpret))
+        mode = vjp_mode if vjp_mode is not None else \
+            (pol.kernel_vjp if policy is not None else "autodiff")
+        check_kernel_vjp_mode(mode)
+    else:
+        mode = pol.kernel_vjp
+    if dict(pol.overrides).get(kernel) is None and B.autotune_enabled():
+        blocks = B.autotune_blocks(kernel, shape, pol)
+    else:
+        blocks = pol.blocks_for(kernel, shape)
+    return blocks, pol.interpret, mode
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret",
                                              "vjp_mode"))
-def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret=None, vjp_mode="autodiff"):
-    """Blockwise attention, routed by ``vjp_mode`` (see module docstring).
-    Any Sq/Sk is accepted; tail blocks are masked in-kernel."""
-    check_kernel_vjp_mode(vjp_mode)
+def _flash_impl(q, k, v, *, causal, window, block_q, block_k, interpret,
+                vjp_mode):
     if vjp_mode == "ref":
         return _ref.attention(q, k, v, causal=causal, window=window)
     if vjp_mode == "fused":
         return _fa.flash_attention_vjp(q, k, v, causal, window, None,
-                                       block_q, block_k,
-                                       _auto_interpret(interpret))
+                                       block_q, block_k, interpret)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
-                               interpret=_auto_interpret(interpret))
+                               interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, policy=None,
+                    block_q=None, block_k=None, interpret=None,
+                    vjp_mode=None):
+    """Blockwise attention, routed by ``policy.kernel_vjp`` (see module
+    docstring). Any Sq/Sk is accepted; tail blocks are masked in-kernel."""
+    (bq, bk), interp, mode = _route(
+        "flash_attention", policy,
+        {"block_q": block_q, "block_k": block_k}, interpret, vjp_mode,
+        (q.shape[-2], k.shape[-2]))
+    return _flash_impl(q, k, v, causal=causal, window=window, block_q=bq,
+                       block_k=bk, interpret=interp, vjp_mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret",
                                              "vjp_mode"))
-def ssd_scan(x, dt, a, b, c, initial_state=None, *, chunk=128,
-             interpret=None, vjp_mode="autodiff"):
-    """SSD chunked scan, routed by ``vjp_mode`` (see module docstring).
-    Any S is accepted (masked tail chunk); ``initial_state`` (B,H,P,N)
-    seeds the recurrence (prefill→decode handoff)."""
-    check_kernel_vjp_mode(vjp_mode)
+def _ssd_impl(x, dt, a, b, c, initial_state, *, chunk, interpret, vjp_mode):
     if vjp_mode == "ref":
         return _ref.ssd(x, dt, a, b, c, initial_state=initial_state)
     if vjp_mode == "fused":
         if initial_state is None:
-            B, _, H, P = x.shape
-            initial_state = jnp.zeros((B, H, P, b.shape[3]), jnp.float32)
+            bsz, _, H, P = x.shape
+            initial_state = jnp.zeros((bsz, H, P, b.shape[3]), jnp.float32)
         return _ssd.ssd_scan_vjp(x, dt, a, b, c, initial_state, chunk,
-                                 _auto_interpret(interpret))
-    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
-                         interpret=_auto_interpret(interpret),
+                                 interpret)
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=interpret,
                          initial_state=initial_state)
+
+
+def ssd_scan(x, dt, a, b, c, initial_state=None, *, chunk=None,
+             interpret=None, vjp_mode=None, policy=None):
+    """SSD chunked scan, routed by ``policy.kernel_vjp`` (see module
+    docstring). Any S is accepted (masked tail chunk); ``initial_state``
+    (B,H,P,N) seeds the recurrence (prefill→decode handoff)."""
+    (ck,), interp, mode = _route(
+        "ssd_scan", policy, {"chunk": chunk}, interpret, vjp_mode,
+        (x.shape[1],))
+    return _ssd_impl(x, dt, a, b, c, initial_state,
+                     chunk=min(ck, int(x.shape[1])), interpret=interp,
+                     vjp_mode=mode)
 
 
 # ------------------------------------------------- distill_kl (fused VJP)
 
-def distill_kl(teacher_logits, student_logits, block_rows=256, block_v=2048,
-               interpret=None, with_teacher_grad=True):
+def distill_kl(teacher_logits, student_logits, block_rows=None,
+               block_v=None, interpret=None, with_teacher_grad=True, *,
+               policy=None):
     """Per-row KL(softmax(t) ‖ softmax(s)), differentiable via the fused
     Pallas backward kernel (kernels/distill_kl.distill_kl_vjp). Any
-    (R, V) shape is accepted; tail blocks are masked in-kernel."""
-    return _kl.distill_kl_vjp(teacher_logits, student_logits, block_rows,
-                              block_v, _auto_interpret(interpret),
-                              with_teacher_grad)
+    (R, V) shape is accepted; tail blocks are masked in-kernel. Always
+    the kernel pair — ``policy`` only picks blocks and interpret-mode
+    (the ref-vs-fused choice lives one level up, in
+    core.losses.softmax_kl)."""
+    legacy = block_rows is not None or block_v is not None \
+        or interpret is not None
+    pol = B.resolve_exec_policy(policy)
+    if legacy:
+        warnings.warn(
+            "distill_kl: positional block/interpret args are deprecated; "
+            "pass policy= instead", DeprecationWarning, stacklevel=2)
+        pol = pol.override_blocks("distill_kl", block_rows=block_rows,
+                                  block_v=block_v)
+        if interpret is not None:
+            pol = pol.replace(interpret=bool(interpret))
+    shape = (teacher_logits.shape[0], teacher_logits.shape[1])
+    if dict(pol.overrides).get("distill_kl") is None \
+            and B.autotune_enabled():
+        br, bv = B.autotune_blocks("distill_kl", shape, pol)
+    else:
+        br, bv = pol.blocks_for("distill_kl", shape)
+    return _kl.distill_kl_vjp(teacher_logits, student_logits, br, bv,
+                              pol.interpret, with_teacher_grad)
 
 
 def distill_kl_mean(teacher_logits, student_logits, **kw):

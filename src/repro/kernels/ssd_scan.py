@@ -108,7 +108,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref, y_ref,
     state_ref[0, 0] = jnp.exp(cs[-1]) * state + outer
 
 
-def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False,
+def ssd_scan(x, dt, a, b, c, *, chunk: int, interpret: bool = False,
              initial_state=None, return_chunk_states: bool = False):
     """SSD forward. x:(B,S,H,P) dt:(B,S,H) a:(H,) b/c:(B,S,G,N).
 
@@ -261,7 +261,7 @@ def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, st_ref, dy_ref,
 
 
 def ssd_scan_bwd(x, dt, a, b, c, chunk_states, dy, dfinal, *,
-                 chunk: int = 128, interpret: bool = False):
+                 chunk: int, interpret: bool = False):
     """Reversed-recurrence gradients from the per-chunk carried states.
 
     Returns (dx, ddt, da, db, dc, dinitial_state) in float32. db/dc are
@@ -321,7 +321,7 @@ def ssd_scan_bwd(x, dt, a, b, c, chunk_states, dy, dfinal, *,
 # ------------------------------------------------------------ custom VJP --
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
-def ssd_scan_vjp(x, dt, a, b, c, initial_state, chunk=128, interpret=False):
+def ssd_scan_vjp(x, dt, a, b, c, initial_state, chunk, interpret=False):
     """ssd_scan with the reversed-recurrence Pallas backward (DESIGN.md §9).
 
     Residual contract: only the inputs (alive anyway) and the per-chunk

@@ -55,8 +55,10 @@ def make_distill_step(cfg: ArchConfig, mesh, *, n_clients: int, **kw):
     cell, re-exported here so launch drivers and the dry-run route every
     jittable step — train / distill / prefill / decode — through one
     module). Keywords (s_lr, chunked_kl, kl_chunk, distill_kl_mode,
-    kernel_vjp_mode) are forwarded verbatim —
-    core.dense_llm.make_pod_distill_step owns the defaults.
+    kernel_vjp_mode, policy) are forwarded verbatim —
+    core.dense_llm.make_pod_distill_step owns the defaults, and
+    unpinned modes resolve through the backend execution-policy
+    registry (configs.backend.resolve_exec_policy, DESIGN.md §11).
     distill_kl_mode="fused" runs the KL loss AND its backward through the
     Pallas custom-VJP kernel pair; kernel_vjp_mode="fused" does the same
     for the trunk's attention/SSM layers (DESIGN.md §9)."""

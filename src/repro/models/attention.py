@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.configs.backend import arch_policy
 from repro.configs.base import ArchConfig
 
 NEG_INF = -2.0 ** 30
@@ -149,8 +150,9 @@ def gqa_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
     k = L.apply_rope(k, cos, sin)
 
     sw = _static_window(window)
-    if cfg.kernel_vjp_mode != "ref" and cache is None and sw is not None:
-        # Pallas kernel route (scfg.kernel_vjp_mode, DESIGN.md §9):
+    pol = arch_policy(cfg)
+    if pol.kernel_vjp != "ref" and cache is None and sw is not None:
+        # Pallas kernel route (configs.backend.arch_policy, DESIGN.md §9):
         # "fused" differentiates through the streaming custom-VJP pair —
         # the path DENSE stage-2 distillation takes when the student (or
         # the generator's teacher ensemble) is an attention LM. Diverges
@@ -158,13 +160,13 @@ def gqa_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
         # builds causal/window masks from block indices, under the
         # contract that positions are contiguous (every cache=None call
         # site passes arange(S)); traced windows and decode/prefill stay
-        # on the XLA paths.
+        # on the XLA paths. Block shapes ride on the policy
+        # (cfg.attn_block_q/kv as explicit overrides, else the
+        # registry/autotuner choice).
         from repro.kernels import ops as kops
         out = kops.flash_attention(
             jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
-            jnp.moveaxis(v, 1, 2), causal=True, window=sw,
-            block_q=cfg.attn_block_q, block_k=cfg.attn_block_kv,
-            vjp_mode=cfg.kernel_vjp_mode)
+            jnp.moveaxis(v, 1, 2), causal=True, window=sw, policy=pol)
         out = jnp.moveaxis(out, 1, 2)                    # (B, S, h, hd)
         return L.linear(p["wo"], out.reshape(B, S, h * hd).astype(x.dtype)), \
             None

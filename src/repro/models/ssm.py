@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.configs.backend import arch_policy
 from repro.configs.base import ArchConfig
 
 
@@ -166,16 +167,18 @@ def mamba2_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
         new_ssm = s * da[..., None, None] \
             + jnp.einsum("bh,bhp,bhn->bhpn", dt1, x1, b1)
         y = jnp.einsum("bhpn,bhn->bhp", new_ssm, c1)[:, None].astype(x.dtype)
-    elif cfg.kernel_vjp_mode != "ref":
-        # Pallas kernel route (scfg.kernel_vjp_mode, DESIGN.md §9):
-        # "fused" differentiates through the reversed-recurrence
+    elif (pol := arch_policy(cfg)).kernel_vjp != "ref":
+        # Pallas kernel route (configs.backend.arch_policy, DESIGN.md
+        # §9): "fused" differentiates through the reversed-recurrence
         # custom-VJP pair; the kernel also honors initial_state (the
-        # prefill→decode handoff it used to drop) and ragged S
+        # prefill→decode handoff it used to drop) and ragged S. The
+        # chunk size rides on the policy (cfg.ssm_chunk as an explicit
+        # override, else the registry/autotuner choice; ops clamps it
+        # into S).
         from repro.kernels import ops as kops
         y, new_ssm = kops.ssd_scan(
             xs, dt, a, bmat, cmat,
-            None if state is None else state["ssm"],
-            chunk=min(cfg.ssm_chunk, S), vjp_mode=cfg.kernel_vjp_mode)
+            None if state is None else state["ssm"], policy=pol)
     else:
         y, new_ssm = ssd_chunked(
             xs, dt, a, bmat, cmat, chunk=min(cfg.ssm_chunk, S),
