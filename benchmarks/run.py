@@ -21,10 +21,12 @@ a CI-sized budget; ``--full`` uses the budget behind EXPERIMENTS.md.
       quarantine admission, checkpoint/resume overhead       [§Robust]
   BK  backend execution-policy registry: registry-default vs
       autotuned blocks per kernel pair, resolution overhead  [§Perf]
+  SERVE continuous-batching ServeEngine, paged vs dense, under
+      a seeded Poisson arrival trace: tok/s + p50/p99        [§Serving]
   ROOF roofline summary from dry-run artifacts               [§Roofline]
 
 ``--json PATH`` additionally writes every emitted record plus per-table
-medians as one machine-readable document (the BENCH_PR8.json perf
+medians as one machine-readable document (the BENCH_PR9.json perf
 trajectory artifact; scripts/tier1.sh writes it, CI uploads it and
 benchmarks/check_regression.py gates PRs on the per-series medians).
 """
@@ -681,6 +683,71 @@ def bk_backend(full: bool):
              f"blocks={tuned};speedup={t_def / t_tun:.2f}x")
 
 
+def serve_table(full: bool):
+    """SERVE: request-level serving (launch/engine.py, DESIGN.md §12).
+    Paged continuous batching vs the sequential dense reference under a
+    seeded synthetic Poisson arrival trace, at two regimes: ``trickle``
+    (arrivals spread out — continuous batching earns little) and
+    ``burst`` (a queue forms at t=0 — the paged engine's fused decode
+    step over all slots is the win). Arrival times are in scheduler
+    steps, not wall-clock, so the trace is identical for both engines
+    and across runs. Emits wall seconds per run; the derived column
+    carries tok_per_sec and p50/p99 per-request latency (submit→done,
+    so queueing counts). First-request latency includes jit warmup on
+    both sides — trajectory data, same caveat as the BK table."""
+    from repro.configs.base import get_smoke_config
+    from repro.launch.engine import ServeEngine, engine_keys
+
+    cfg = get_smoke_config("llama3.2-3b")
+    gen = 16 if full else 8
+    plens = (6, 10)                       # two jit buckets, ragged batch
+    k_init, k_prompt, _ = engine_keys(0)
+    from repro.models import transformer as T
+    params = T.init_model(k_init, cfg)
+    rng = np.random.default_rng(9)        # the seeded Poisson trace
+
+    def drive(mode, n, rate, max_reqs):
+        prompts = [np.asarray(jax.random.randint(
+            jax.random.fold_in(k_prompt, i), (plens[i % 2],), 0,
+            cfg.vocab_size), np.int32) for i in range(n)]
+        arrive = np.floor(np.cumsum(
+            rng.exponential(1.0 / rate, n))).astype(int) if rate > 0 \
+            else np.zeros(n, int)
+        eng = ServeEngine(cfg, params, mode=mode, max_reqs=max_reqs,
+                          max_len=max(plens) + gen, seed=0)
+        rids, i, step = [], 0, 0
+        limit = int(arrive.max(initial=0)) + 4 * n * (gen + 2) + 50
+        t0 = time.perf_counter()
+        while i < n or any(eng.poll(r)["status"] != "done" for r in rids):
+            while i < n and arrive[i] <= step:
+                rids.append(eng.submit(prompts[i], max_new=gen))
+                i += 1
+            eng.step()
+            step += 1
+            if step > limit:
+                raise RuntimeError("serve bench scheduler stuck")
+        wall = time.perf_counter() - t0
+        lat = np.asarray([eng.poll(r)["latency_s"] for r in rids])
+        return wall, n * gen / wall, lat
+
+    regimes = (("trickle", 4, 0.25, 2), ("burst", 8 if full else 6, 0.0, 4))
+    for regime, n, rate, max_reqs in regimes:
+        walls = {}
+        for mode in ("paged", "dense"):
+            # same rng state for both engines: re-seed per run so the
+            # two modes see the identical arrival trace
+            rng = np.random.default_rng(9)
+            wall, tps, lat = drive(mode, n, rate, max_reqs)
+            walls[mode] = wall
+            emit(f"serve/{mode}/{regime}", wall,
+                 (f"tok_per_sec={tps:.1f};"
+                  f"p50_ms={np.percentile(lat, 50) * 1e3:.1f};"
+                  f"p99_ms={np.percentile(lat, 99) * 1e3:.1f};"
+                  f"reqs={n};gen={gen};slots={max_reqs}"))
+        emit(f"serve/paged_vs_dense/{regime}", 0.0,
+             f"speedup={walls['dense'] / walls['paged']:.2f}x")
+
+
 def r_roofline(full: bool):
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     files = sorted(glob.glob(os.path.join(
@@ -777,7 +844,7 @@ TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
           "attn": attn_flash, "ssd": ssd_table, "e": e_ensemble,
           "c": c_client_training, "s": s_sharding, "r": r_robustness,
-          "bk": bk_backend, "roof": r_roofline}
+          "bk": bk_backend, "serve": serve_table, "roof": r_roofline}
 
 
 def main() -> None:
@@ -789,7 +856,7 @@ def main() -> None:
                     help="comma list of tables, e.g. t1,t6,k")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records + per-table medians as JSON "
-                         "(the BENCH_PR8.json trajectory artifact)")
+                         "(the BENCH_PR9.json trajectory artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived", flush=True)

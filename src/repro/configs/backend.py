@@ -52,11 +52,15 @@ KL_MODES = ("ref", "fused")
 KERNEL_VJP_MODES = ("ref", "autodiff", "fused")
 
 # the three custom-VJP kernel pairs and their block-shape argument names,
-# in canonical order (DESIGN.md §9)
+# in canonical order (DESIGN.md §9), plus the forward-only serving
+# kernel (§12; its "page" is the block-pool page size — a cache *layout*
+# parameter consumed at allocation time by launch/paging.py, not a
+# per-call kwarg)
 KERNEL_BLOCK_ARGS = {
     "distill_kl": ("block_rows", "block_v"),
     "flash_attention": ("block_q", "block_k"),
     "ssd_scan": ("chunk",),
+    "paged_attention": ("page",),
 }
 
 # per-backend default execution modes. ensemble_shard stays "none" on
@@ -79,11 +83,11 @@ _PROFILES = {
 # and are refined by the autotuner cache, not by code edits.
 _BLOCKS = {
     "cpu": {"distill_kl": (256, 2048), "flash_attention": (128, 128),
-            "ssd_scan": (128,)},
+            "ssd_scan": (128,), "paged_attention": (16,)},
     "gpu": {"distill_kl": (256, 2048), "flash_attention": (128, 128),
-            "ssd_scan": (128,)},
+            "ssd_scan": (128,), "paged_attention": (16,)},
     "tpu": {"distill_kl": (256, 1024), "flash_attention": (256, 256),
-            "ssd_scan": (256,)},
+            "ssd_scan": (256,), "paged_attention": (128,)},
 }
 
 # autotuner candidate block shapes, in canonical order — ties between
@@ -93,6 +97,7 @@ _CANDIDATES = {
     "distill_kl": ((256, 2048), (128, 1024), (64, 512), (32, 256)),
     "flash_attention": ((128, 128), (64, 64), (32, 32)),
     "ssd_scan": ((128,), (64,), (32,)),
+    "paged_attention": ((16,), (32,), (64,)),
 }
 
 _SEED_CACHE = os.path.join(os.path.dirname(__file__), "autotune_seed.json")
@@ -489,6 +494,24 @@ def _candidate_runner(kernel, shape, blocks, interpret):
             jax.block_until_ready(_fa.flash_attention(
                 q, k, k, causal=True, window=0, block_q=bq, block_k=bk,
                 interpret=interpret))
+    elif kernel == "paged_attention":
+        _pa = importlib.import_module("repro.kernels.paged_attention")
+        # shape = (max_len,): page candidates trade gather granularity
+        # against per-block overhead at the engine's sequence capacity
+        (t,) = shape
+        (page,) = blocks
+        r, d = 2, 16
+        m = max(1, -(-int(t) // page))
+        pool = jnp.linspace(-1.0, 1.0, (r * m + 1) * page * d,
+                            dtype=jnp.float32).reshape(r * m + 1, page, 1, d)
+        q = jnp.linspace(-1.0, 1.0, r * d,
+                         dtype=jnp.float32).reshape(r, 1, d)
+        bt = jnp.arange(r * m, dtype=jnp.int32).reshape(r, m) + 1
+        seq = jnp.full((r,), int(t), jnp.int32)
+
+        def run():
+            jax.block_until_ready(_pa.paged_attention(
+                q, pool, pool, bt, seq, interpret=interpret))
     elif kernel == "ssd_scan":
         _ssd = importlib.import_module("repro.kernels.ssd_scan")
         (s,) = shape

@@ -12,10 +12,20 @@ registry route fixes that.
 
 The old ``interpret=`` / ``block_*=`` / ``vjp_mode=`` kwargs keep
 working through a deprecation shim: passing any of them emits a
-``DeprecationWarning`` and maps them onto the resolved policy as
-explicit overrides. Bare legacy calls keep their historical defaults
+``DeprecationWarning`` carrying the exact ``policy=`` replacement for
+that call, and maps them onto the resolved policy as explicit
+overrides. Bare legacy calls keep their historical defaults
 (``vjp_mode="autodiff"`` for flash_attention/ssd_scan), so pre-registry
 callers see unchanged behavior.
+
+Removal schedule for the shim:
+  * PR 8 — ``policy=`` introduced; legacy kwargs deprecated.
+  * PR 9 — every in-repo caller migrated to ``policy=`` (the only
+    remaining legacy calls are tests/test_backend.py's shim-equivalence
+    suite, which pins the shim's behavior until removal); the warning
+    now prints the exact replacement snippet.
+  * PR 11 — the legacy kwargs are REMOVED: passing them becomes a
+    TypeError, and the shim-equivalence tests retire with them.
 
 Every differentiated kernel is a custom-VJP kernel *pair* (DESIGN.md §9):
 the forward streams blocks with online accumulators and persists only
@@ -59,6 +69,7 @@ import jax.numpy as jnp
 from repro.configs import backend as B
 from repro.kernels import flash_attention as _fa
 from repro.kernels import distill_kl as _kl
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
 
@@ -66,35 +77,56 @@ KERNEL_VJP_MODES = B.KERNEL_VJP_MODES
 check_kernel_vjp_mode = B.check_kernel_vjp_mode
 
 
+def _legacy_snippet(kernel, named, interpret, vjp_mode):
+    """The exact ``policy=`` expression replacing one legacy call — the
+    warning is the migration guide (see the removal schedule above)."""
+    expr = "backend.resolve_exec_policy(scfg)"
+    if named:
+        args = ", ".join(f"{k}={v}" for k, v in named.items())
+        expr += f'.override_blocks("{kernel}", {args})'
+    repl = {}
+    if interpret is not None:
+        repl["interpret"] = bool(interpret)
+    if vjp_mode is not None:
+        repl["kernel_vjp"] = vjp_mode
+    if repl:
+        args = ", ".join(f"{k}={v!r}" for k, v in repl.items())
+        expr += f".replace({args})"
+    return expr
+
+
 def _route(kernel, policy, legacy_blocks, interpret, vjp_mode, shape):
     """Resolve (blocks, interpret, vjp_mode) for one call.
 
     Pure-policy calls take everything from the registry resolution
     (autotuned blocks when enabled). Legacy kwargs emit a
-    DeprecationWarning and overlay the policy: explicitly-passed blocks
-    and interpret win; an unpassed legacy ``vjp_mode`` keeps the
-    historical ``"autodiff"`` default (NOT the registry mode) so
-    pre-registry call sites keep their exact semantics.
+    DeprecationWarning with the exact replacement snippet and overlay
+    the policy: explicitly-passed blocks and interpret win; an unpassed
+    legacy ``vjp_mode`` keeps the historical ``"autodiff"`` default
+    (NOT the registry mode) so pre-registry call sites keep their exact
+    semantics until the PR 11 removal.
     """
     legacy = interpret is not None or vjp_mode is not None \
         or any(v is not None for v in legacy_blocks.values())
     pol = B.resolve_exec_policy(policy)
     if legacy:
-        warnings.warn(
-            f"{kernel}: interpret=/vjp_mode=/block kwargs are deprecated; "
-            "pass policy=configs.backend.resolve_exec_policy(scfg) (or an "
-            "explicit ExecPolicy) instead", DeprecationWarning,
-            stacklevel=3)
         named = {n: v for n, v in legacy_blocks.items() if v is not None}
+        warnings.warn(
+            f"{kernel}: the interpret=/vjp_mode=/block kwargs are "
+            "deprecated and will be removed in PR 11 (schedule in "
+            "kernels/ops.py). Replace this call with\n"
+            f"    ops.{kernel}(..., policy="
+            f"{_legacy_snippet(kernel, named, interpret, vjp_mode)})",
+            DeprecationWarning, stacklevel=3)
         if named:
             pol = pol.override_blocks(kernel, **named)
         if interpret is not None:
             pol = pol.replace(interpret=bool(interpret))
         mode = vjp_mode if vjp_mode is not None else \
             (pol.kernel_vjp if policy is not None else "autodiff")
-        check_kernel_vjp_mode(mode)
     else:
         mode = pol.kernel_vjp
+    check_kernel_vjp_mode(mode)
     if dict(pol.overrides).get(kernel) is None and B.autotune_enabled():
         blocks = B.autotune_blocks(kernel, shape, pol)
     else:
@@ -158,6 +190,41 @@ def ssd_scan(x, dt, a, b, c, initial_state=None, *, chunk=None,
                      vjp_mode=mode)
 
 
+# -------------------------------------------- paged_attention (serving) --
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret",
+                                             "vjp_mode"))
+def _paged_impl(q, k_pool, v_pool, block_tables, seq_lens, *, scale,
+                interpret, vjp_mode):
+    if vjp_mode == "ref":
+        return _ref.paged_attention(q, k_pool, v_pool, block_tables,
+                                    seq_lens, scale=scale)
+    return _pa.paged_attention(q, k_pool, v_pool, block_tables, seq_lens,
+                               scale=scale, interpret=interpret)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    scale=None, policy=None):
+    """Decode attention through a block-pool cache (DESIGN.md §12).
+
+    q: (R, Hq, D); k/v_pool: (P, page, Hkv, D); block_tables: (R, M);
+    seq_lens: (R,). Routed by ``policy.kernel_vjp`` like the training
+    kernels — ``"ref"`` runs the gather-then-materialize oracle,
+    anything else the streaming Pallas kernel (forward-only by
+    construction: decode never differentiates, so there is no VJP pair).
+
+    Unlike the other wrappers this one takes no block kwarg at all,
+    legacy or otherwise: the registry's ``page`` entry is a *layout*
+    property consumed once, at pool allocation (launch/paging.page_size);
+    per-call geometry is fixed by ``k_pool.shape[1]``.
+    """
+    pol = B.resolve_exec_policy(policy)
+    check_kernel_vjp_mode(pol.kernel_vjp)
+    return _paged_impl(q, k_pool, v_pool, block_tables, seq_lens,
+                       scale=scale, interpret=pol.interpret,
+                       vjp_mode=pol.kernel_vjp)
+
+
 # ------------------------------------------------- distill_kl (fused VJP)
 
 def distill_kl(teacher_logits, student_logits, block_rows=None,
@@ -173,9 +240,15 @@ def distill_kl(teacher_logits, student_logits, block_rows=None,
         or interpret is not None
     pol = B.resolve_exec_policy(policy)
     if legacy:
+        named = {k: v for k, v in (("block_rows", block_rows),
+                                   ("block_v", block_v)) if v is not None}
         warnings.warn(
-            "distill_kl: positional block/interpret args are deprecated; "
-            "pass policy= instead", DeprecationWarning, stacklevel=2)
+            "distill_kl: the positional block/interpret args are "
+            "deprecated and will be removed in PR 11 (schedule in "
+            "kernels/ops.py). Replace this call with\n"
+            "    ops.distill_kl(t, s, policy="
+            f"{_legacy_snippet('distill_kl', named, interpret, None)})",
+            DeprecationWarning, stacklevel=2)
         pol = pol.override_blocks("distill_kl", block_rows=block_rows,
                                   block_v=block_v)
         if interpret is not None:

@@ -57,6 +57,39 @@ def attention_grads(q, k, v, g, *, causal: bool = True, window: int = 0,
     return pull(g)
 
 
+# --------------------------------------------------------- paged attention --
+
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    scale=None):
+    """Gather-then-materialize paged decode attention (the reference).
+
+    q: (R, Hq, D); k/v_pool: (P, page, Hkv, D); block_tables: (R, M);
+    seq_lens: (R,) live cached tokens per request. The oracle really
+    gathers the whole (R, M*page) context per request and runs a
+    materialized masked softmax — deliberately the opposite algorithm to
+    the kernel's streamed per-block gather. ``seq_lens[r] == 0`` rows
+    return exactly zero (matching the kernel's zero-mass finalize).
+    """
+    R, hq, d = q.shape
+    _, page, hkv, _ = k_pool.shape
+    m_slots = block_tables.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    # (R, M, page, Hkv, D) -> (R, T, Hkv, D), T = M * page
+    k = k_pool[block_tables].reshape(R, m_slots * page, hkv, d)
+    v = v_pool[block_tables].reshape(R, m_slots * page, hkv, d)
+    qg = q.reshape(R, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("rkgd,rtkd->rkgt", qg,
+                        k.astype(jnp.float32)) * scale
+    live = jnp.arange(m_slots * page)[None, :] < seq_lens[:, None]
+    scores = jnp.where(live[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(live[:, None, None], p, 0.0)  # zero-live rows -> zeros
+    out = jnp.einsum("rkgt,rtkd->rkgd", p, v.astype(jnp.float32))
+    return out.reshape(R, hq, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------- ssd scan --
 
 def ssd(x, dt, a, b, c, *, initial_state=None):

@@ -1,0 +1,363 @@
+"""Request-level continuous-batching serving engine (DESIGN.md §12).
+
+``ServeEngine`` replaces the fixed-batch ``serve()`` monolith with the
+API production traffic needs: callers ``submit()`` individual requests
+(ragged prompt/gen lengths, any arrival order), ``step()`` advances the
+whole engine one scheduler iteration, ``poll()``/``drain()`` collect
+per-request results.
+
+Two execution modes:
+
+  * ``"paged"`` (default where supported) — continuous batching over the
+    block-pool cache (launch/paging.py). One jitted decode step advances
+    EVERY running request at once through ``T.forward_paged`` /
+    ``kernels.paged_attention``; admission runs an exact-length dense
+    prefill per request and scatters the filled cache into the pool, so
+    a new request joins the running batch without touching the others
+    (the SSM prefill→decode handoff is exact by PR 5's
+    ``initial_state`` split≡full guarantee).
+  * ``"dense"`` — the sequential reference: one request at a time,
+    batch-1 dense cache, the PR-scope oracle for paged-vs-dense token
+    equivalence and the fallback for families the paged layout doesn't
+    cover (moe's MLA latent cache, vlm's cross-attention stream,
+    sliding-window patterns, model-parallel meshes).
+
+Scheduling policy (deliberately simple, fully deterministic): FIFO
+admission; a request is admitted the moment a scheduler slot AND its
+whole block budget ``ceil((prompt+max_new)/page)`` are free — blocks are
+granted for the request's lifetime up front, so decode can never
+deadlock mid-flight; completion (``max_new`` tokens) releases the slot
+and blocks immediately. Head-of-line blocking is accepted: a queued
+request never overtakes an earlier one.
+
+Sampling is decoupled from batch composition: greedy is host-side
+argmax over f32 logits; stochastic sampling draws from
+``fold_in(fold_in(k_sample, request_id), token_index)`` so a request's
+token stream is identical whatever else shares its decode batch — this
+is what makes continuous ≡ sequential testable (and is the fix for the
+old serve.py reusing one key for init/prompts/sampling).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import backend as B
+from repro.configs.base import ArchConfig
+from repro.launch import paging as PG
+from repro.launch import steps as ST
+from repro.models import transformer as T
+
+supports_paged = PG.supports_paged
+
+
+def engine_keys(seed: int):
+    """The serving PRNG streams: (init, prompts, sampling). One split up
+    front — init_model, synthetic-prompt draws and token sampling must
+    never share a key (the old serve.py reused one for all three)."""
+    return tuple(jax.random.split(jax.random.PRNGKey(seed), 3))
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    temperature: float | None        # None -> greedy
+    tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    blocks: tuple = ()
+    status: str = "queued"           # queued | running | done
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    """See module docstring. ``max_len`` bounds ``prompt + max_new`` per
+    request; ``max_reqs`` is the concurrent-slot count; ``n_blocks``
+    defaults to exactly enough for ``max_reqs`` worst-case requests plus
+    the reserved null block (size the pool smaller to exercise
+    exhaustion/queueing)."""
+
+    def __init__(self, cfg: ArchConfig, params=None, policy=None, *,
+                 mesh=None, max_reqs: int = 4, max_len: int = 256,
+                 n_blocks: int | None = None, page: int | None = None,
+                 mode: str | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = B.resolve_exec_policy(policy)
+        k_init, _, self._k_sample = engine_keys(seed)
+        self.params = T.init_model(k_init, cfg) if params is None else params
+        self.max_reqs, self.max_len = int(max_reqs), int(max_len)
+
+        model_par = (mesh is not None
+                     and dict(zip(mesh.axis_names, mesh.devices.shape))
+                     .get("model", 1) > 1)
+        if mode is None:
+            mode = "paged" if supports_paged(cfg) and not model_par \
+                else "dense"
+        if mode == "paged" and (not supports_paged(cfg) or model_par):
+            raise ValueError(
+                f"paged mode unsupported here (family={cfg.family!r}, "
+                f"sliding_window={cfg.sliding_window}, "
+                f"kv_lora_rank={cfg.kv_lora_rank}, "
+                f"model_parallel={model_par}); use mode='dense'")
+        if mode not in ("paged", "dense"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.mode = mode
+
+        self._queue: list[_Request] = []
+        self._reqs: dict[int, _Request] = {}
+        self._next_rid = 0
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "decode_steps": 0, "generated": 0}
+
+        if mode == "paged":
+            self.page = page if page is not None \
+                else PG.page_size(self.policy, self.max_len)
+            self.page = max(1, min(int(self.page), self.max_len))
+            self.n_pages = -(-self.max_len // self.page)
+            if n_blocks is None:
+                n_blocks = 1 + self.max_reqs * self.n_pages
+            self.allocator = PG.BlockAllocator(n_blocks)
+            with self._ctx():
+                self._pools = PG.init_paged_cache(
+                    cfg, max_reqs=self.max_reqs, n_blocks=n_blocks,
+                    page=self.page)
+                self._bt = jnp.zeros((self.max_reqs, self.n_pages),
+                                     jnp.int32)
+            self._slots: list[_Request | None] = [None] * self.max_reqs
+            self._seq = np.zeros((self.max_reqs,), np.int32)
+            self._cur = np.zeros((self.max_reqs,), np.int32)
+            self._admit_cache: dict[int, object] = {}
+
+            def decode_step(params, pools, bt, tokens, positions):
+                logits, new_pools = T.forward_paged(
+                    params, cfg, tokens=tokens, positions=positions,
+                    cache=pools, block_tables=bt)
+                return logits[:, -1].astype(jnp.float32), new_pools
+
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
+        else:
+            # uniform signatures: vision is always a keyword (None for
+            # text-only families) — no positional special-casing
+            self._prefill = jax.jit(ST.make_prefill_step(cfg, mesh),
+                                    donate_argnums=(1,))
+            self._dec = jax.jit(ST.make_serve_step(cfg, mesh),
+                                donate_argnums=(1,))
+            self._vision = (jnp.zeros((1, cfg.n_patches, cfg.vision_dim))
+                            if cfg.family == "vlm" else None)
+
+    # ------------------------------------------------------------- API --
+
+    def submit(self, prompt, max_new: int = 16, sampling=None) -> int:
+        """Queue a request; returns its id. ``sampling``: None/{} →
+        greedy argmax, ``{"temperature": t}`` → categorical at t."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"engine max_len ({self.max_len})")
+        temperature = None
+        if sampling:
+            temperature = float(sampling.get("temperature", 1.0))
+        rid = self._next_rid
+        self._next_rid += 1
+        req = _Request(rid, prompt, int(max_new), temperature,
+                       t_submit=time.perf_counter())
+        self._reqs[rid] = req
+        self._queue.append(req)
+        return rid
+
+    def step(self) -> int:
+        """One scheduler iteration. Paged: admit whatever fits, then one
+        fused decode step for every running slot. Dense: run the oldest
+        queued request to completion. Returns live (queued + running)
+        request count."""
+        if self.mode == "paged":
+            admitted = self._admit()
+            if (not admitted and self._queue
+                    and all(s is None for s in self._slots)):
+                req = self._queue[0]
+                raise RuntimeError(
+                    f"request {req.rid} needs "
+                    f"{PG.blocks_needed(len(req.prompt), req.max_new, self.page)} "
+                    f"blocks but the idle pool has only "
+                    f"{self.allocator.n_free} — pool too small for this "
+                    "request")
+            self._decode_once()
+        else:
+            self._run_one_dense()
+        return sum(1 for r in self._reqs.values() if r.status != "done")
+
+    def poll(self, rid: int) -> dict:
+        r = self._reqs[rid]
+        out = {"status": r.status, "tokens": list(r.tokens)}
+        if r.status == "done":
+            out["latency_s"] = r.t_done - r.t_submit
+        return out
+
+    def drain(self, max_steps: int | None = None) -> dict:
+        """step() until every submitted request completes; returns
+        {rid: np.ndarray of generated tokens}."""
+        if max_steps is None:
+            max_steps = 4 * sum(r.max_new + 2 for r in self._reqs.values()
+                                if r.status != "done") + 16
+        steps = 0
+        while any(r.status != "done" for r in self._reqs.values()):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps — "
+                                   "scheduler stuck")
+        return {r.rid: np.asarray(r.tokens, np.int32)
+                for r in self._reqs.values()}
+
+    # ------------------------------------------------------ internals --
+
+    def _ctx(self):
+        return self.mesh if self.mesh is not None \
+            else contextlib.nullcontext()
+
+    def _sample(self, req: _Request, logits_row: np.ndarray) -> int:
+        self.stats["generated"] += 1
+        if req.temperature is None:
+            return int(np.argmax(logits_row))
+        k = jax.random.fold_in(
+            jax.random.fold_in(self._k_sample, req.rid), len(req.tokens))
+        return int(jax.random.categorical(
+            k, jnp.asarray(logits_row) / req.temperature))
+
+    def _finish(self, req: _Request):
+        req.status = "done"
+        req.t_done = time.perf_counter()
+        if req.slot >= 0:
+            slot = req.slot
+            self._slots[slot] = None
+            self._seq[slot] = 0
+            self._cur[slot] = 0
+            # point the freed slot's table back at the null block so its
+            # masked decode writes stop touching the released blocks
+            self._bt = self._bt.at[slot].set(
+                jnp.zeros((self.n_pages,), jnp.int32))
+            self.allocator.release(req.blocks)
+            req.slot = -1
+
+    # paged mode ----------------------------------------------------------
+
+    def _admit_fn(self, p: int):
+        fn = self._admit_cache.get(p)
+        if fn is None:
+            cfg = self.cfg
+
+            def admit(params, pools, bt, prompt, slot, row):
+                # exact-length prefill: no padding, because pad tokens
+                # would advance the SSM recurrence and shift the last-
+                # token logits; one jit cache entry per prompt length
+                cache = T.init_cache(cfg, 1, p)
+                logits, filled, _ = T.forward(
+                    params, cfg, tokens=prompt,
+                    positions=jnp.arange(p, dtype=jnp.int32), cache=cache,
+                    cache_pos=jnp.int32(0), vision=None, remat=False)
+                pools, bt = PG.scatter_prefill(cfg, pools, bt, filled,
+                                               slot, row)
+                return logits[:, -1].astype(jnp.float32), pools, bt
+
+            fn = jax.jit(admit, donate_argnums=(1, 2))
+            self._admit_cache[p] = fn
+        return fn
+
+    def _admit(self) -> int:
+        admitted = 0
+        while self._queue:
+            req = self._queue[0]
+            slot = next((i for i, s in enumerate(self._slots)
+                         if s is None), None)
+            if slot is None:
+                break
+            need = PG.blocks_needed(len(req.prompt), req.max_new, self.page)
+            blocks = self.allocator.alloc(need)
+            if blocks is None:
+                break                    # pool exhausted: wait, FIFO holds
+            self._queue.pop(0)
+            t0 = time.perf_counter()
+            row = np.zeros((self.n_pages,), np.int32)
+            row[:need] = blocks
+            p = len(req.prompt)
+            with self._ctx():
+                logits, self._pools, self._bt = self._admit_fn(p)(
+                    self.params, self._pools, self._bt,
+                    jnp.asarray(req.prompt)[None], jnp.int32(slot),
+                    jnp.asarray(row))
+                logits = np.asarray(logits[0])
+            req.slot, req.blocks, req.status = slot, tuple(blocks), "running"
+            self._slots[slot] = req
+            self._seq[slot] = p
+            tok = self._sample(req, logits)
+            req.tokens.append(tok)
+            self._cur[slot] = tok
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            admitted += 1
+            if len(req.tokens) >= req.max_new:
+                self._finish(req)
+        return admitted
+
+    def _decode_once(self):
+        if all(s is None for s in self._slots):
+            return
+        t0 = time.perf_counter()
+        with self._ctx():
+            logits, self._pools = self._decode(
+                self.params, self._pools, self._bt,
+                jnp.asarray(self._cur)[:, None], jnp.asarray(self._seq))
+            logits = np.asarray(logits)
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            self._seq[slot] += 1
+            tok = self._sample(req, logits[slot])
+            req.tokens.append(tok)
+            self._cur[slot] = tok
+            if len(req.tokens) >= req.max_new:
+                self._finish(req)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+
+    # dense (sequential reference / fallback) mode ------------------------
+
+    def _run_one_dense(self):
+        if not self._queue:
+            return
+        req = self._queue.pop(0)
+        req.status = "running"
+        p = len(req.prompt)
+        t0 = time.perf_counter()
+        with self._ctx():
+            cache = T.init_cache(self.cfg, 1, p + req.max_new)
+            logits, cache = self._prefill(self.params, cache,
+                                          jnp.asarray(req.prompt)[None],
+                                          vision=self._vision)
+            first = np.asarray(logits[0, -1], np.float32)
+        req.tokens.append(self._sample(req, first))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with self._ctx():
+            for i in range(req.max_new - 1):
+                logits, cache = self._dec(
+                    self.params, cache,
+                    jnp.asarray([[req.tokens[-1]]], jnp.int32),
+                    jnp.int32(p + i), vision=self._vision)
+                req.tokens.append(
+                    self._sample(req, np.asarray(logits[0, -1], np.float32)))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += max(0, req.max_new - 1)
+        self._finish(req)

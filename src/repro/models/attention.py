@@ -208,6 +208,52 @@ def gqa_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
     return y, new_cache
 
 
+def gqa_apply_paged(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                    positions: jnp.ndarray, pool: dict,
+                    block_tables: jnp.ndarray):
+    """One-token-per-request decode against a block-pool cache
+    (launch/paging.py, DESIGN.md §12).
+
+    x: (R, 1, D) — the incoming token for each scheduler slot;
+    positions: (R,) int32 — that token's absolute position (== tokens
+    already cached for the slot); pool: {"k","v"} of (P, page, Kh, Dh);
+    block_tables: (R, M).
+
+    The new K/V is scattered to pool row ``(block_tables[r, pos//page],
+    pos % page)`` — inactive slots carry all-zero table rows, so their
+    writes land in reserved null block 0 — then attention runs over each
+    slot's first ``positions[r] + 1`` cached tokens through
+    ops.paged_attention (policy-routed: ref oracle or Pallas kernel).
+    Returns (y, new_pool).
+    """
+    R, S, D = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(R, S, h, hd)
+    k = L.linear(p["wk"], x).reshape(R, S, kh, hd)
+    v = L.linear(p["wv"], x).reshape(R, S, kh, hd)
+
+    cos, sin = L.rope_cos_sin(positions[:, None], hd, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)                    # per-request (R,1,half)
+    k = L.apply_rope(k, cos, sin)
+
+    P, page = pool["k"].shape[0], pool["k"].shape[1]
+    blk = jnp.take_along_axis(block_tables,
+                              (positions // page)[:, None], axis=1)[:, 0]
+    flat = blk * page + positions % page             # (R,) pool row ids
+    new_pool = {}
+    for name, cur in (("k", k), ("v", v)):
+        fp = pool[name].reshape(P * page, kh, hd)
+        new_pool[name] = fp.at[flat].set(
+            cur[:, 0].astype(fp.dtype)).reshape(P, page, kh, hd)
+
+    from repro.kernels import ops as kops
+    out = kops.paged_attention(q[:, 0], new_pool["k"], new_pool["v"],
+                               block_tables, positions + 1,
+                               policy=arch_policy(cfg))
+    y = L.linear(p["wo"], out.reshape(R, 1, h * hd).astype(x.dtype))
+    return y, new_pool
+
+
 # ---------------------------------------------------------- cross-attention
 
 def cross_attn_init(key, cfg: ArchConfig, *, dtype) -> dict:

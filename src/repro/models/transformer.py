@@ -465,6 +465,86 @@ def forward(params: dict, cfg: ArchConfig, *,
     return logits, new_cache, {"moe_aux": aux_total}
 
 
+def _apply_dense_block_paged(p, x, cfg, positions, pool, block_tables):
+    h, new_pool = A.gqa_apply_paged(p["attn"], L.rmsnorm(p["norm1"], x), cfg,
+                                    positions=positions, pool=pool,
+                                    block_tables=block_tables)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return x, new_pool
+
+
+def forward_paged(params: dict, cfg: ArchConfig, *,
+                  tokens: jnp.ndarray, positions: jnp.ndarray,
+                  cache: dict, block_tables: jnp.ndarray):
+    """One continuous-batching decode step over the paged block-pool
+    cache (launch/paging.init_paged_cache, DESIGN.md §12).
+
+    tokens: (R, 1) int32 — each scheduler slot's incoming token;
+    positions: (R,) int32 — its absolute position (== tokens already
+    cached for that slot; inactive slots pass 0 and their writes land in
+    the reserved null block). Mirrors ``forward``'s decode scan bodies
+    exactly, with the dense-cache attention swapped for the paged
+    gather; SSM blocks are untouched — their decode step is already
+    per-slot O(1) state (the batch axis IS the slot axis).
+
+    Families: dense/audio (no sliding-window pattern), ssm, hybrid.
+    Returns (logits (R, 1, V), new_cache).
+    """
+    fam = cfg.family
+    from repro.launch.paging import supports_paged
+    if not supports_paged(cfg):
+        raise ValueError(f"forward_paged: unsupported family {fam!r} "
+                         "(moe/vlm/sliding-window serve via the "
+                         "sequential dense engine mode)")
+    x = L.embed(params["embed"], tokens, compute_dtype=_dt(cfg))
+    _scan_l = functools.partial(_scan, use_scan=cfg.scan_layers)
+
+    if fam in ("dense", "audio"):
+        def body(h, xs):
+            p_l, c_l = xs
+            return _apply_dense_block_paged(p_l, h, cfg, positions, c_l,
+                                            block_tables)
+
+        x, new_layers = _scan_l(body, x, (params["blocks"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif fam == "ssm":
+        def body(h, xs):
+            p_l, s_l = xs
+            return _apply_ssm_block(p_l, h, cfg, s_l, True)
+
+        x, new_states = _scan_l(body, x, (params["blocks"],
+                                          cache["layers"]))
+        new_cache = {"layers": new_states}
+
+    else:  # hybrid
+        _, tail = _hybrid_shape(cfg)
+
+        def inner(h, xs):
+            p_l, s_l = xs
+            return _apply_ssm_block(p_l, h, cfg, s_l, True)
+
+        def super_body(h, xs):
+            p_grp, s_grp, ac = xs
+            h, new_s = _scan_l(inner, h, (p_grp, s_grp))
+            h, new_ac = _apply_dense_block_paged(params["shared"], h, cfg,
+                                                 positions, ac,
+                                                 block_tables)
+            return h, (new_s, new_ac)
+
+        x, (new_s, new_ac) = _scan_l(super_body, x,
+                                     (params["blocks"], cache["layers"],
+                                      cache["shared"]))
+        new_cache = {"layers": new_s, "shared": new_ac}
+        if tail:
+            x, new_tail = _scan_l(inner, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+    x = L.rmsnorm(params["final_norm"], x)
+    return L.unembed(params["embed"], x), new_cache
+
+
 def _apply_mla_dense0(p, x, cfg, positions, cache, cache_pos):
     h, new_c = A.mla_apply(p["attn"], L.rmsnorm(p["norm1"], x), cfg,
                            positions=positions, cache=cache,

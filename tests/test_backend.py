@@ -288,7 +288,8 @@ def test_seed_cache_is_valid():
 
 _BANNED_ATTRS = {"loop_mode", "client_loop_mode", "ensemble_shard_mode",
                  "distill_kl_mode", "kernel_vjp_mode"}
-_BLOCK_NAMES = {"block_q", "block_k", "block_rows", "block_v", "chunk"}
+_BLOCK_NAMES = {"block_q", "block_k", "block_rows", "block_v", "chunk",
+                "page"}
 
 
 def _src_files():

@@ -17,10 +17,31 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import backend as B
 from repro.kernels import ops, ref
 from _hyp import given, settings, st
 
 KEY = jax.random.PRNGKey(0)
+
+# every ops.* call here pins its geometry through an explicit ExecPolicy
+# (the legacy block/interpret/vjp_mode kwargs are on the PR 11 removal
+# schedule — kernels/ops.py; the shim itself is pinned by
+# tests/test_backend.py's shim-equivalence suite until then)
+_POL = B.resolve_exec_policy(None)
+
+
+def _attn_pol(bq, bk, mode="autodiff"):
+    return _POL.override_blocks("flash_attention", block_q=bq,
+                                block_k=bk).replace(kernel_vjp=mode)
+
+
+def _ssd_pol(chunk, mode="autodiff"):
+    return _POL.override_blocks("ssd_scan",
+                                chunk=chunk).replace(kernel_vjp=mode)
+
+
+def _kl_pol(br, bv):
+    return _POL.override_blocks("distill_kl", block_rows=br, block_v=bv)
 
 
 @pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,win,dtype", [
@@ -36,7 +57,7 @@ def test_flash_attention_vs_ref(B, Hq, Hkv, Sq, Sk, D, win, dtype):
     q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
     k = jax.random.normal(ks[1], (B, Hkv, Sk, D), dtype)
     v = jax.random.normal(ks[2], (B, Hkv, Sk, D), dtype)
-    out = ops.flash_attention(q, k, v, window=win, block_q=32, block_k=32)
+    out = ops.flash_attention(q, k, v, window=win, policy=_attn_pol(32, 32))
     want = ref.attention(q, k, v, window=win)
     tol = 1e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -57,7 +78,7 @@ def test_distill_kl_vs_ref(R, V, br, bv, dtype):
     ks = jax.random.split(KEY, 2)
     t = (jax.random.normal(ks[0], (R, V)) * 3).astype(dtype)
     s = (jax.random.normal(ks[1], (R, V)) * 3).astype(dtype)
-    out = ops.distill_kl(t, s, br, bv)
+    out = ops.distill_kl(t, s, policy=_kl_pol(br, bv))
     want = ref.distill_kl(t, s)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
@@ -82,7 +103,9 @@ def _grad_matrix():
 
 
 def _vjp_pair(t, s, br, bv, g, **kw):
-    _, pull = jax.vjp(lambda a, b: ops.distill_kl(a, b, br, bv, **kw), t, s)
+    _, pull = jax.vjp(
+        lambda a, b: ops.distill_kl(a, b, policy=_kl_pol(br, bv), **kw),
+        t, s)
     return pull(g)
 
 
@@ -114,7 +137,7 @@ def test_distill_kl_vjp_neg_inf_padding_columns():
     s = jax.random.normal(ks[1], (R, V)) * 3
     t = t.at[:, real:].set(NEG_INF)
     s = s.at[:, real:].set(NEG_INF)
-    out = ops.distill_kl(t, s, 4, 128)
+    out = ops.distill_kl(t, s, policy=_kl_pol(4, 128))
     want = ref.distill_kl(t[:, :real], s[:, :real])
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
     g = jax.random.normal(ks[2], (R,))
@@ -135,7 +158,7 @@ def test_distill_kl_vjp_extreme_logits():
     t = jax.random.choice(ks[0], jnp.array([-1e4, 0.0, 1e4]), (R, V)) \
         + jax.random.normal(ks[1], (R, V))
     s = jnp.roll(t, 7, axis=1) + jax.random.normal(ks[2], (R, V))
-    out = ops.distill_kl(t, s, 4, 64)
+    out = ops.distill_kl(t, s, policy=_kl_pol(4, 64))
     want = ref.distill_kl(t, s)
     assert bool(jnp.all(jnp.isfinite(out)))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
@@ -196,7 +219,7 @@ def test_distill_kl_vjp_property(R, V, br, bv, seed):
     t = jax.random.normal(ks[0], (R, V)) * 4
     s = jax.random.normal(ks[1], (R, V)) * 4
     g = jax.random.normal(ks[2], (R,))
-    out = ops.distill_kl(t, s, br, bv)
+    out = ops.distill_kl(t, s, policy=_kl_pol(br, bv))
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.distill_kl(t, s)), atol=2e-5)
     dt, ds = _vjp_pair(t, s, br, bv, g)
@@ -218,7 +241,7 @@ def test_ssd_scan_vs_sequential_ref(B, S, H, P, G, N, cl):
     a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
     b = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
     c = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
-    y, st = ops.ssd_scan(x, dt, a, b, c, chunk=cl)
+    y, st = ops.ssd_scan(x, dt, a, b, c, policy=_ssd_pol(cl))
     y2, st2 = ref.ssd(x, dt, a, b, c)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=2e-3)
     np.testing.assert_allclose(np.asarray(st), np.asarray(st2), atol=2e-3)
@@ -234,7 +257,7 @@ def test_ssd_scan_matches_model_chunked_impl():
     a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
     b = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
     c = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
-    y1, s1 = ops.ssd_scan(x, dt, a, b, c, chunk=16)
+    y1, s1 = ops.ssd_scan(x, dt, a, b, c, policy=_ssd_pol(16))
     y2, s2 = ssd_chunked(x, dt, a, b, c, chunk=16)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3)
@@ -261,8 +284,8 @@ _ATTN_GRAD_SHAPES = [
 
 
 def _attn_vjp(q, k, v, g, win, bq, bk):
-    f = lambda a, b, c: ops.flash_attention(a, b, c, window=win, block_q=bq,
-                                            block_k=bk, vjp_mode="fused")
+    f = lambda a, b, c: ops.flash_attention(
+        a, b, c, window=win, policy=_attn_pol(bq, bk, "fused"))
     out, pull = jax.vjp(f, q, k, v)
     return out, pull(g)
 
@@ -298,7 +321,7 @@ def test_flash_attention_ragged_tails_no_longer_crash():
     q = jax.random.normal(ks[0], (1, 2, 40, 16))
     k = jax.random.normal(ks[1], (1, 2, 40, 16))
     v = jax.random.normal(ks[2], (1, 2, 40, 16))
-    out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    out = ops.flash_attention(q, k, v, policy=_attn_pol(32, 32))
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.attention(q, k, v)), atol=1e-5)
 
@@ -389,7 +412,7 @@ def test_ssd_scan_vjp_matches_ref_grads(dtype_name, block_name,
     dtype = _GRAD_DTYPES[dtype_name]
     cl = _SSD_GRAD_CHUNKS[block_name]
     x, dt, a, b, c, s0, gy, gs = _ssd_inputs(B, S, H, P, G, N, dtype, init)
-    f = lambda *ar: ops.ssd_scan(*ar, chunk=cl, vjp_mode="fused")
+    f = lambda *ar: ops.ssd_scan(*ar, policy=_ssd_pol(cl, "fused"))
     (y, st), pull = jax.vjp(f, x, dt, a, b, c, s0)
     yr, st_r = ref.ssd(x, dt, a, b, c, initial_state=s0)
     # bf16 grads additionally carry the output-cast quantization, hence
@@ -414,7 +437,7 @@ def test_ssd_scan_ragged_tail_no_longer_crashes():
     the carried state (dt = 0 on masked lanes)."""
     x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 40, 2, 8, 1, 8,
                                           jnp.float32, False)
-    y, st = ops.ssd_scan(x, dt, a, b, c, chunk=32)
+    y, st = ops.ssd_scan(x, dt, a, b, c, policy=_ssd_pol(32))
     yr, st_r = ref.ssd(x, dt, a, b, c)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3)
     np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), atol=2e-3)
@@ -427,12 +450,12 @@ def test_ssd_scan_initial_state_regression():
     honored it."""
     x, dt, a, b, c, s0, _, _ = _ssd_inputs(1, 64, 2, 8, 1, 8,
                                            jnp.float32, True)
-    y, st = ops.ssd_scan(x, dt, a, b, c, s0, chunk=16)
+    y, st = ops.ssd_scan(x, dt, a, b, c, s0, policy=_ssd_pol(16))
     yr, st_r = ref.ssd(x, dt, a, b, c, initial_state=s0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3)
     np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), atol=2e-3)
     # a cold start must now DISAGREE (the old kernel returned this)
-    y0, _ = ops.ssd_scan(x, dt, a, b, c, chunk=16)
+    y0, _ = ops.ssd_scan(x, dt, a, b, c, policy=_ssd_pol(16))
     assert float(jnp.max(jnp.abs(y0 - y))) > 1e-3
 
 
@@ -443,11 +466,11 @@ def test_ssd_scan_prefill_decode_handoff():
     x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 56, 2, 8, 2, 8,
                                           jnp.float32, False)
     cut = 24
-    y_full, st_full = ops.ssd_scan(x, dt, a, b, c, chunk=16)
+    y_full, st_full = ops.ssd_scan(x, dt, a, b, c, policy=_ssd_pol(16))
     y1, st1 = ops.ssd_scan(x[:, :cut], dt[:, :cut], a, b[:, :cut],
-                           c[:, :cut], chunk=16)
+                           c[:, :cut], policy=_ssd_pol(16))
     y2, st2 = ops.ssd_scan(x[:, cut:], dt[:, cut:], a, b[:, cut:],
-                           c[:, cut:], st1, chunk=16)
+                           c[:, cut:], st1, policy=_ssd_pol(16))
     np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
                                np.asarray(y_full), atol=2e-3)
     np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
@@ -455,15 +478,19 @@ def test_ssd_scan_prefill_decode_handoff():
 
 
 def test_kernel_vjp_mode_ref_and_unknown():
-    """"ref" routes to the oracles; unknown modes fail fast."""
+    """"ref" routes to the oracles; unknown modes fail fast — including
+    a hand-built policy carrying a bogus kernel_vjp (the wrappers
+    re-validate, so a stale ExecPolicy can't silently fall through to
+    the forward-kernel branch)."""
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (1, 2, 32, 16))
-    out = ops.flash_attention(q, q, q, vjp_mode="ref")
+    out = ops.flash_attention(q, q, q, policy=_POL.replace(kernel_vjp="ref"))
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.attention(q, q, q)), atol=0)
     with pytest.raises(ValueError, match="unknown kernel_vjp mode"):
-        ops.flash_attention(q, q, q, vjp_mode="pallas")
+        ops.flash_attention(q, q, q,
+                            policy=_POL.replace(kernel_vjp="pallas"))
     x, dt, a, b, c, _, _, _ = _ssd_inputs(1, 32, 2, 8, 1, 8,
                                           jnp.float32, False)
     with pytest.raises(ValueError, match="unknown kernel_vjp mode"):
-        ops.ssd_scan(x, dt, a, b, c, vjp_mode="nope")
+        ops.ssd_scan(x, dt, a, b, c, policy=_POL.replace(kernel_vjp="nope"))
