@@ -839,12 +839,106 @@ def r_robustness(full: bool):
         shutil.rmtree(ckdir, ignore_errors=True)
 
 
+def m_scaling(full: bool):
+    """Federation-axis scaling (DESIGN.md §13): the m in {10,100,1000}
+    curve behind the bucketed/chunked engine. Per m: local-phase
+    clients/sec under quantile buckets + chunked group setup, padded-step
+    waste per bucketing mode on a Dirichlet alpha=0.1 partition, host
+    peak RSS, tree-vs-flat fedavg and the chunked ensemble teacher. A
+    heterogeneous (cnn1+cnn2) point rides at the largest m to pin the
+    multi-group path."""
+    import resource
+
+    from repro.configs.backend import resolve_exec_policy
+    from repro.data.partition import dirichlet_partition
+    from repro.data.pipeline import plan_step_waste
+    from repro.core.ensemble import grouped_ensemble_logits
+    from repro.fl import fedavg_stacked, train_clients_grouped
+    from repro.models.cnn import CNNSpec
+
+    spec_kw = dict(num_classes=4, in_ch=1, width=0.25, image_size=8)
+    batch = 16
+
+    def rss_mb():
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+    def build(m, kinds, seed=0):
+        rng = np.random.default_rng(seed)
+        y = rng.integers(0, 4, max(8 * m, 2000))
+        parts = dirichlet_partition(y, m, 0.1, seed=seed)
+        sizes = [max(2, len(p)) for p in parts]
+        shards = [(rng.standard_normal((n, 8, 8, 1)).astype(np.float32),
+                   rng.integers(0, 4, n)) for n in sizes]
+        specs = [CNNSpec(kind=kinds[i % len(kinds)], **spec_kw)
+                 for i in range(m)]
+        return specs, shards, sizes
+
+    pol = resolve_exec_policy(SimpleNamespaceCfg())
+    ms = (10, 100, 1000)
+    for m in ms:
+        specs, shards, sizes = build(m, ("cnn1",))
+        for mode in ("off", "pow2", "quantile"):
+            w = plan_step_waste(sizes, batch, mode)
+            emit(f"m/plan_waste_{mode}/m{m}", 0.0,
+                 f"waste={w:.4f};batch={batch}")
+        keys = list(jax.random.split(jax.random.PRNGKey(1), m))
+        t0 = time.time()
+        clients = train_clients_grouped(
+            specs, shards, epochs=1, lr=0.05, momentum=0.9,
+            batch_size=batch, use_ldam=False, num_classes=4,
+            seeds=list(range(m)), init_keys=keys, policy=pol)
+        dt = time.time() - t0
+        emit(f"m/local_train/m{m}", dt / m,
+             f"clients_per_sec={m / dt:.2f};rss_mb={rss_mb():.0f}")
+        gspecs, gparams = clients.grouped
+        n_data = [c.n_data for c in clients]
+        t_flat = time_call(lambda: fedavg_stacked(gparams[0], n_data))
+        t_tree = time_call(lambda: fedavg_stacked(
+            gparams[0], n_data, mode="tree", branch=pol.fedavg_branch))
+        emit(f"m/fedavg_tree/m{m}", t_tree,
+             f"branch={pol.fedavg_branch};flat_s={t_flat:.4f};"
+             f"speedup={t_flat / t_tree:.2f}x")
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(
+            (batch, 8, 8, 1)).astype(np.float32))
+        t_full = time_call(lambda: grouped_ensemble_logits(
+            gspecs, gparams, x))
+        t_chunk = time_call(lambda: grouped_ensemble_logits(
+            gspecs, gparams, x, chunk=pol.teacher_chunk))
+        emit(f"m/teacher_chunked/m{m}", t_chunk,
+             f"chunk={pol.teacher_chunk};full_s={t_full:.4f};"
+             f"rss_mb={rss_mb():.0f}")
+
+    # heterogeneous point at the curve's top: multi-group bucketing
+    m = ms[-1] if full else ms[-2]
+    specs, shards, _ = build(m, ("cnn1", "cnn2"), seed=3)
+    keys = list(jax.random.split(jax.random.PRNGKey(4), m))
+    t0 = time.time()
+    train_clients_grouped(
+        specs, shards, epochs=1, lr=0.05, momentum=0.9, batch_size=batch,
+        use_ldam=False, num_classes=4, seeds=list(range(m)),
+        init_keys=keys, policy=pol)
+    dt = time.time() - t0
+    emit(f"m/local_train_hetero/m{m}", dt / m,
+         f"clients_per_sec={m / dt:.2f};groups=2;rss_mb={rss_mb():.0f}")
+
+
+class SimpleNamespaceCfg:
+    """Minimal scfg for the scale table: every federation-scale knob on,
+    everything else at registry defaults."""
+    plan_bucketing = "quantile"
+    stack_chunk = 64
+    fedavg_mode = "tree"
+    fedavg_branch = 8
+    teacher_chunk = 64
+
+
 TABLES = {"t1": t1_alpha_sweep, "t2": t2_heterogeneous, "t3": t3_num_clients,
           "t4": t4_ldam, "t5": t5_multiround, "t6": t6_ablation,
           "f3": f3_local_vs_global, "k": k_kernels, "kl": kl_distill,
           "attn": attn_flash, "ssd": ssd_table, "e": e_ensemble,
           "c": c_client_training, "s": s_sharding, "r": r_robustness,
-          "bk": bk_backend, "serve": serve_table, "roof": r_roofline}
+          "bk": bk_backend, "serve": serve_table, "roof": r_roofline,
+          "m": m_scaling}
 
 
 def main() -> None:

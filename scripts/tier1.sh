@@ -5,9 +5,10 @@
 # Default: the ROADMAP tier-1 test command, then the kernel (k),
 # custom-VJP pair (kl, attn, ssd), ensemble/epoch-driver (e),
 # grouped-client-training (c), client-axis sharding (s),
+# federation-axis scaling (m),
 # robustness (r), backend-registry (bk) and serving-engine (serve)
 # benchmark tables — printed
-# as CSV and written as the machine-readable BENCH_PR9.json trajectory
+# as CSV and written as the machine-readable BENCH_PR10.json trajectory
 # artifact (benchmarks/run.py --json; CI uploads it and
 # benchmarks/check_regression.py gates PRs against the committed
 # previous-PR baseline).
@@ -15,7 +16,7 @@
 # --fast: tight-time-budget gate — skips tests marked `slow` (the long
 # grouped-vs-python equivalence sweeps, see tests/conftest.py) and the
 # benchmark tables. NOTE: because the tables are skipped, --fast does
-# NOT emit BENCH_PR9.json; CI's bench job calls benchmarks/run.py --json
+# NOT emit BENCH_PR10.json; CI's bench job calls benchmarks/run.py --json
 # directly instead.
 #
 # --chaos: the fault-injection matrix (DESIGN.md §10) — reruns the
@@ -55,6 +56,6 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python benchmarks/run.py --only k,kl,attn,ssd,e,c,s,r,bk,serve \
-    --json BENCH_PR9.json
+  python benchmarks/run.py --only k,kl,attn,ssd,e,c,s,r,bk,serve,m \
+    --json BENCH_PR10.json
 exit 0

@@ -50,52 +50,80 @@ CLIENT_LOOP_MODES = ("python", "grouped")
 SHARD_MODES = ("none", "clients")
 KL_MODES = ("ref", "fused")
 KERNEL_VJP_MODES = ("ref", "autodiff", "fused")
+BUCKETING_MODES = ("off", "pow2", "quantile")
+FEDAVG_MODES = ("flat", "tree")
 
 # the three custom-VJP kernel pairs and their block-shape argument names,
 # in canonical order (DESIGN.md §9), plus the forward-only serving
 # kernel (§12; its "page" is the block-pool page size — a cache *layout*
 # parameter consumed at allocation time by launch/paging.py, not a
-# per-call kwarg)
+# per-call kwarg). The ``*_bwd`` entries tune the BACKWARD kernel of a
+# pair separately from its forward (DESIGN.md §13): distill_kl's
+# backward is embarrassingly parallel where its forward is a sequential
+# vocab sweep, and flash-attention's dq/dkv streams have different
+# residency than the forward's online softmax — the same block winner
+# rarely serves both directions. ssd_scan has NO ``_bwd`` entry by
+# construction: its residual contract snapshots carried states at
+# *forward* chunk boundaries, so the backward must walk the identical
+# chunk grid (a separate bwd chunk would misalign the snapshots).
 KERNEL_BLOCK_ARGS = {
     "distill_kl": ("block_rows", "block_v"),
+    "distill_kl_bwd": ("block_rows", "block_v"),
     "flash_attention": ("block_q", "block_k"),
+    "flash_attention_bwd": ("block_q", "block_k"),
     "ssd_scan": ("chunk",),
     "paged_attention": ("page",),
 }
 
 # per-backend default execution modes. ensemble_shard stays "none" on
 # every backend: sharding is a topology choice (how many devices carry
-# the client axis), not a backend choice — opt in per-scfg.
+# the client axis), not a backend choice — opt in per-scfg. The same
+# reasoning pins the federation-scale knobs (DESIGN.md §13) to their
+# bit-compat-off settings on every backend: bucketing/chunking/tree
+# reduction are *federation-size* choices (m=1000 wants them, m=10
+# must stay bitwise-identical to the unchunked path), so scenarios
+# opt in per-scfg rather than inheriting them from the hardware.
+_SCALE_DEFAULTS = {"bucketing": "off", "stack_chunk": 0,
+                   "fedavg": "flat", "fedavg_branch": 8,
+                   "teacher_chunk": 0}
 _PROFILES = {
     "cpu": {"loop": "python", "client_loop": "grouped",
             "ensemble_shard": "none", "distill_kl": "ref",
-            "kernel_vjp": "ref", "interpret": True},
+            "kernel_vjp": "ref", "interpret": True, **_SCALE_DEFAULTS},
     "gpu": {"loop": "fused", "client_loop": "grouped",
             "ensemble_shard": "none", "distill_kl": "fused",
-            "kernel_vjp": "fused", "interpret": False},
+            "kernel_vjp": "fused", "interpret": False, **_SCALE_DEFAULTS},
     "tpu": {"loop": "fused", "client_loop": "grouped",
             "ensemble_shard": "none", "distill_kl": "fused",
-            "kernel_vjp": "fused", "interpret": False},
+            "kernel_vjp": "fused", "interpret": False, **_SCALE_DEFAULTS},
 }
 
 # per-backend default block shapes. The cpu row reproduces the historical
 # hardcoded kwargs exactly; accelerator rows start from the same values
 # and are refined by the autotuner cache, not by code edits.
 _BLOCKS = {
-    "cpu": {"distill_kl": (256, 2048), "flash_attention": (128, 128),
+    "cpu": {"distill_kl": (256, 2048), "distill_kl_bwd": (256, 2048),
+            "flash_attention": (128, 128), "flash_attention_bwd": (128, 128),
             "ssd_scan": (128,), "paged_attention": (16,)},
-    "gpu": {"distill_kl": (256, 2048), "flash_attention": (128, 128),
+    "gpu": {"distill_kl": (256, 2048), "distill_kl_bwd": (256, 2048),
+            "flash_attention": (128, 128), "flash_attention_bwd": (128, 128),
             "ssd_scan": (128,), "paged_attention": (16,)},
-    "tpu": {"distill_kl": (256, 1024), "flash_attention": (256, 256),
+    "tpu": {"distill_kl": (256, 1024), "distill_kl_bwd": (256, 1024),
+            "flash_attention": (256, 256), "flash_attention_bwd": (256, 256),
             "ssd_scan": (256,), "paged_attention": (128,)},
 }
 
 # autotuner candidate block shapes, in canonical order — ties between
 # equally-timed candidates break toward the EARLIEST entry, so this
-# order is part of the determinism contract.
+# order is part of the determinism contract. The ``*_bwd`` candidate
+# lists mirror the forward's; their thunks time the standalone backward
+# kernel (distill_kl_bwd / flash_attention_bwd) on precomputed forward
+# residuals, so a bwd winner reflects only backward-stream cost.
 _CANDIDATES = {
     "distill_kl": ((256, 2048), (128, 1024), (64, 512), (32, 256)),
+    "distill_kl_bwd": ((256, 2048), (128, 1024), (64, 512), (32, 256)),
     "flash_attention": ((128, 128), (64, 64), (32, 32)),
+    "flash_attention_bwd": ((128, 128), (64, 64), (32, 32)),
     "ssd_scan": ((128,), (64,), (32,)),
     "paged_attention": ((16,), (32,), (64,)),
 }
@@ -132,6 +160,31 @@ def check_kernel_vjp_mode(mode):
     if mode not in KERNEL_VJP_MODES:
         raise ValueError(f"unknown kernel_vjp mode {mode!r} "
                          f"(expected one of {KERNEL_VJP_MODES})")
+
+
+def check_bucketing_mode(mode):
+    if mode not in BUCKETING_MODES:
+        raise ValueError(f"unknown plan_bucketing {mode!r} "
+                         f"(expected one of {BUCKETING_MODES})")
+
+
+def check_fedavg_mode(mode):
+    if mode not in FEDAVG_MODES:
+        raise ValueError(f"unknown fedavg_mode {mode!r} "
+                         f"(expected one of {FEDAVG_MODES})")
+
+
+def check_chunk_size(name, value):
+    """Chunk knobs are non-negative ints; 0 disables chunking."""
+    if int(value) != value or int(value) < 0:
+        raise ValueError(f"{name} must be a non-negative int, "
+                         f"got {value!r}")
+
+
+def check_fedavg_branch(value):
+    if int(value) != value or int(value) < 2:
+        raise ValueError(f"fedavg_branch must be an int >= 2, "
+                         f"got {value!r}")
 
 
 def detect_backend(scfg=None) -> str:
@@ -172,6 +225,13 @@ class ExecPolicy:
     distill_kl: str = "ref"
     kernel_vjp: str = "ref"
     interpret: bool = True
+    # federation-scale knobs (DESIGN.md §13); short names again because
+    # the grep test bans the scfg spellings outside configs/
+    bucketing: str = "off"
+    stack_chunk: int = 0
+    fedavg: str = "flat"
+    fedavg_branch: int = 8
+    teacher_chunk: int = 0
     # ((kernel, (vals...)), ...) in KERNEL_BLOCK_ARGS order
     blocks: tuple = ()
     # (((kernel, bucket), (vals...)), ...) from the autotune cache
@@ -388,11 +448,21 @@ def resolve_exec_policy(scfg=None, *, backend=None) -> "ExecPolicy":
     shard = knob("ensemble_shard_mode", prof["ensemble_shard"])
     kl = knob("distill_kl_mode", prof["distill_kl"])
     vjp = knob("kernel_vjp_mode", prof["kernel_vjp"])
+    bucketing = knob("plan_bucketing", prof["bucketing"])
+    stack_chunk = knob("stack_chunk", prof["stack_chunk"])
+    favg = knob("fedavg_mode", prof["fedavg"])
+    fbranch = knob("fedavg_branch", prof["fedavg_branch"])
+    tchunk = knob("teacher_chunk", prof["teacher_chunk"])
     check_loop_mode(loop)
     check_client_loop_mode(client_loop)
     check_shard_mode(shard)
     check_kl_mode(kl)
     check_kernel_vjp_mode(vjp)
+    check_bucketing_mode(bucketing)
+    check_chunk_size("stack_chunk", stack_chunk)
+    check_fedavg_mode(favg)
+    check_fedavg_branch(fbranch)
+    check_chunk_size("teacher_chunk", tchunk)
     interp = prof["interpret"]
     env_i = os.environ.get("REPRO_INTERPRET")
     if env_i is not None and env_i != "":
@@ -404,6 +474,8 @@ def resolve_exec_policy(scfg=None, *, backend=None) -> "ExecPolicy":
     pol = ExecPolicy(
         backend=b, loop=loop, client_loop=client_loop, ensemble_shard=shard,
         distill_kl=kl, kernel_vjp=vjp, interpret=bool(interp),
+        bucketing=bucketing, stack_chunk=int(stack_chunk), fedavg=favg,
+        fedavg_branch=int(fbranch), teacher_chunk=int(tchunk),
         blocks=_freeze_blocks(_BLOCKS[b]), tuned=tuned,
         overrides=_normalize_overrides(getattr(scfg, "kernel_blocks", ())))
     if key is not None:
@@ -458,9 +530,12 @@ def _pick_winner(timings) -> int:
 
 
 def _candidate_runner(kernel, shape, blocks, interpret):
-    """A thunk timing the kernel-pair FORWARD at ``shape`` with candidate
-    ``blocks`` on synthetic inputs (fresh concrete arrays — never the
-    traced operands, so tuning composes with jit tracing)."""
+    """A thunk timing one kernel at ``shape`` with candidate ``blocks``
+    on synthetic inputs (fresh concrete arrays — never the traced
+    operands, so tuning composes with jit tracing). Forward entries time
+    the pair's forward; ``*_bwd`` entries time the standalone backward
+    kernel on precomputed forward residuals, so the two directions tune
+    independently (DESIGN.md §13)."""
     import importlib
 
     import jax
@@ -469,7 +544,46 @@ def _candidate_runner(kernel, shape, blocks, interpret):
     # the public names in repro.kernels shadow the submodules (ops.py
     # wrappers are re-exported as repro.kernels.distill_kl etc.), so the
     # low-level modules must be resolved by full dotted path
-    if kernel == "distill_kl":
+    if kernel == "distill_kl_bwd":
+        _kl = importlib.import_module("repro.kernels.distill_kl")
+        rows, v = shape
+        t = jnp.linspace(-1.0, 1.0, rows * v, dtype=jnp.float32)
+        t = t.reshape(rows, v)
+        s = t[:, ::-1]
+        # forward residuals at the forward's registry-default blocks —
+        # held fixed so only the backward stream is on the clock
+        fbr, fbv = _BLOCKS["cpu"]["distill_kl"]
+        klv, (mt, zt, _st, ms, zs) = _kl.distill_kl(
+            t, s, block_rows=fbr, block_v=fbv, interpret=interpret,
+            return_stats=True)
+        lse_t, lse_s = mt + jnp.log(zt), ms + jnp.log(zs)
+        g = jnp.ones((rows,), jnp.float32)
+        br, bv = blocks
+
+        def run():
+            jax.block_until_ready(_kl.distill_kl_bwd(
+                t, s, lse_t, lse_s, klv, g, block_rows=br, block_v=bv,
+                interpret=interpret))
+    elif kernel == "flash_attention_bwd":
+        _fa = importlib.import_module("repro.kernels.flash_attention")
+        sq, sk = shape
+        d = 16
+        q = jnp.linspace(-1.0, 1.0, sq * d,
+                         dtype=jnp.float32).reshape(1, 1, sq, d)
+        k = jnp.linspace(-1.0, 1.0, sk * d,
+                         dtype=jnp.float32).reshape(1, 1, sk, d)
+        fbq, fbk = _BLOCKS["cpu"]["flash_attention"]
+        _out, o_f32, lse = _fa.flash_attention(
+            q, k, k, causal=True, window=0, block_q=fbq, block_k=fbk,
+            interpret=interpret, return_stats=True)
+        g = jnp.ones_like(q)
+        bq, bk = blocks
+
+        def run():
+            jax.block_until_ready(_fa.flash_attention_bwd(
+                q, k, k, o_f32, lse, g, causal=True, window=0, scale=None,
+                block_q=bq, block_k=bk, interpret=interpret))
+    elif kernel == "distill_kl":
         _kl = importlib.import_module("repro.kernels.distill_kl")
         rows, v = shape
         t = jnp.linspace(-1.0, 1.0, rows * v, dtype=jnp.float32)
@@ -565,9 +679,11 @@ def autotune_blocks(kernel: str, shape, policy: "ExecPolicy") -> tuple:
 
 __all__ = [
     "BACKENDS", "LOOP_MODES", "CLIENT_LOOP_MODES", "SHARD_MODES",
-    "KL_MODES", "KERNEL_VJP_MODES", "KERNEL_BLOCK_ARGS", "ExecPolicy",
+    "KL_MODES", "KERNEL_VJP_MODES", "BUCKETING_MODES", "FEDAVG_MODES",
+    "KERNEL_BLOCK_ARGS", "ExecPolicy",
     "detect_backend", "resolve_exec_policy", "arch_policy",
     "shape_bucket", "autotune_blocks", "autotune_enabled", "clear_caches",
     "check_loop_mode", "check_client_loop_mode", "check_shard_mode",
-    "check_kl_mode", "check_kernel_vjp_mode",
+    "check_kl_mode", "check_kernel_vjp_mode", "check_bucketing_mode",
+    "check_fedavg_mode", "check_chunk_size", "check_fedavg_branch",
 ]

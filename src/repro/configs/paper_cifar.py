@@ -89,6 +89,35 @@ class DenseExperimentConfig:
                                     # table / autotuner cache
                                     # (configs/backend.py).
 
+    # — federation-scale knobs (DESIGN.md §13). All default to the
+    # registry's bit-compat-off setting on every backend; enabling any
+    # of them changes memory/padding behavior but the per-client
+    # minibatch stream and (for chunking) the trained params are
+    # contract-tested identical (tests/test_scale.py).
+    plan_bucketing: str | None = None  # batch-plan bucketing before
+                                    # padding: "off" (one plan per arch
+                                    # group, padded to the slowest
+                                    # client), "pow2" (bin clients by
+                                    # next-pow2 steps/epoch; waste < 2x)
+                                    # or "quantile" (4 quantile bins of
+                                    # the steps/epoch distribution).
+    stack_chunk: int | None = None  # clients per host-side stacking /
+                                    # training chunk (0 = whole group):
+                                    # group setup peaks at O(chunk) host
+                                    # memory instead of O(m).
+    fedavg_mode: str | None = None  # "flat" (one global weighted sum)
+                                    # or "tree" (hierarchical reduce
+                                    # with per-level n_data reweighting;
+                                    # fp32-accumulated, shardable over
+                                    # the "clients" mesh axis).
+    fedavg_branch: int | None = None  # tree-reduce fan-in per level
+                                    # (>= 2; registry default 8).
+    teacher_chunk: int | None = None  # clients per ensemble-teacher
+                                    # scan chunk (0 = off): the stage-2
+                                    # teacher streams sub-group logit
+                                    # partial sums instead of
+                                    # materializing (m, B, C).
+
     # fault tolerance (DESIGN.md §10) — injection knobs (fl/faults.py):
     fault_plan: tuple = ()          # explicit per-client faults, entries
                                     # are Fault or (client, kind[, scale
@@ -106,6 +135,18 @@ class DenseExperimentConfig:
                                     # the round aborts with QuorumError
     norm_screen: float = 0.0        # param-norm outlier screen in MADs
                                     # (0 = off; cohorts >= 5 only)
+    cos_screen: float | None = None  # direction screen: min cosine of
+                                    # each upload to its leave-one-out
+                                    # cohort mean (None = off; cohorts
+                                    # >= 5 only). Closes the
+                                    # norm-preserving `signflip` gap the
+                                    # MAD screen cannot see (a flipped
+                                    # upload has cosine ~ -1 to the
+                                    # cohort it trained with). Assumes
+                                    # cohort models cluster
+                                    # directionally — true for trained
+                                    # uploads from similar data, NOT
+                                    # for raw random inits.
 
     # — stage-2 self-healing (core/dense.py):
     nan_policy: str = "raise"       # non-finite server loss: "raise",

@@ -116,8 +116,12 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     # stack_grouped statically slices quarantined clients out when the
     # federation carries admission masks (fl.protocol.admit_uploads):
     # the teacher is built from survivors only, bit-identically to a
-    # federation without the quarantined clients
-    gspecs, gparams = stack_grouped(clients)
+    # federation without the quarantined clients. stack_chunk stages the
+    # stack through O(chunk) host slices; teacher_chunk streams the
+    # stage-1/2 ensemble sum through scanned client slices so the
+    # teacher never materializes (m, B, C) activations (DESIGN.md §13).
+    t_chunk = pol.teacher_chunk
+    gspecs, gparams = stack_grouped(clients, chunk=pol.stack_chunk)
     if mesh is not None:
         from repro.fl.sharding import put_grouped
         gparams = put_grouped(gspecs, gparams, mesh)
@@ -131,7 +135,7 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
             x = gen_forward(gp, z)
             avg, stats = grouped_ensemble_logits(gspecs, gparams, x,
                                                  with_bn_stats=True,
-                                                 mesh=mesh)
+                                                 mesh=mesh, chunk=t_chunk)
             stu = cnn_logits(stu_p, student_spec, x)
             l_ce = LS.ce_loss(avg, y)
             l_bn = LS.bn_loss(stats) if use_bn else jnp.zeros(())
@@ -153,7 +157,8 @@ def make_dense_steps(clients: Sequence[Client], student_spec: CNNSpec,
     @jax.jit
     def student_step(stu_p, s_state, gen_p, gparams, z):
         x = jax.lax.stop_gradient(gen_forward(gen_p, z))
-        avg = grouped_ensemble_logits(gspecs, gparams, x, mesh=mesh)
+        avg = grouped_ensemble_logits(gspecs, gparams, x, mesh=mesh,
+                                      chunk=t_chunk)
 
         def loss_fn(sp):
             logits, new_sp, _ = cnn_apply(sp, student_spec, x, train=True)

@@ -42,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 import numpy as np
 
 from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_apply_grouped,
-                              is_conv_stack)
+                              is_groupable)
 
 
 @dataclass
@@ -94,7 +94,26 @@ def group_clients(clients: Sequence[Client]):
     return [(spec, tuple(idx)) for spec, idx in groups.items()]
 
 
-def stack_grouped(clients: Sequence[Client], *, apply_masks: bool = True):
+def _stack_chunked(trees, chunk: int | None = None):
+    """Stack a list of per-client pytrees on a new leading axis.
+
+    ``chunk > 0`` builds the stack in fixed-size slices concatenated on
+    device (DESIGN.md §13): the host-side transfer buffer peaks at
+    O(chunk) client trees instead of one O(m) staging blob, which is
+    what lets a m=1000 federation stack without an m-sized host spike.
+    Values are bitwise identical either way (stack/concatenate move
+    bytes, they don't compute).
+    """
+    if chunk and 0 < chunk < len(trees):
+        parts = [jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *trees[i:i + chunk])
+                 for i in range(0, len(trees), chunk)]
+        return jax.tree.map(lambda *ps: jnp.concatenate(ps, 0), *parts)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_grouped(clients: Sequence[Client], *, apply_masks: bool = True,
+                  chunk: int | None = None):
     """Build the grouped-ensemble representation.
 
     -> (gspecs, gparams) where gspecs is the *static* part — a tuple of
@@ -130,9 +149,10 @@ def stack_grouped(clients: Sequence[Client], *, apply_masks: bool = True):
             if len(idx) == 1:
                 gparams.append(clients[idx[0]].params)
             else:
-                gparams.append(jax.tree.map(
-                    lambda *xs: jnp.stack(xs),
-                    *[clients[i].params for i in idx]))
+                # chunk > 0 stages the stack in O(chunk) host slices
+                # (DESIGN.md §13); bitwise the same values either way
+                gparams.append(_stack_chunked(
+                    [clients[i].params for i in idx], chunk))
     if masks is not None and any(m is not None for m in masks):
         return apply_group_masks(gspecs, gparams, masks)
     return tuple(gspecs), gparams
@@ -188,8 +208,10 @@ def apply_group_masks(gspecs, gparams, group_masks):
 
 def _group_stack_forward(params, spec, x, size, with_stats):
     """(logits (size, B, K) f32, stacked stats) for one stacked group —
-    fused grouped-channel forward for conv-stack kinds, vmap fallback."""
-    if is_conv_stack(spec.kind):
+    fused grouped-channel forward for groupable kinds (the conv-stack
+    zoo AND the ResNet/WRN kinds — models/cnn.py), vmap fallback for
+    anything else."""
+    if is_groupable(spec.kind):
         # fully-fused grouped-channel forward (models/cnn.py)
         lgs, stacked_stats = cnn_stack_apply_grouped(
             params, spec, x, size, with_stats=with_stats)
@@ -202,10 +224,59 @@ def _group_stack_forward(params, spec, x, size, with_stats):
     return jax.vmap(one)(params)
 
 
-def _group_sum_sharded(params, spec, x, size, mesh, with_stats):
+def _chunked_stack_sum(params, spec, x, size, chunk, with_stats,
+                       reduce=None):
+    """Stream one stacked group's logit sum in ``chunk``-client slices
+    (DESIGN.md §13): ``lax.scan`` over sub-stacks of the leading client
+    axis, each chunk's (chunk, B, K) logits folded into an fp32 (B, K)
+    accumulator — the teacher never materializes the full (size, B, K)
+    activation block, and the scan body is rematerialized
+    (``jax.checkpoint``) so differentiation (the generator's teacher
+    gradient) re-runs chunks instead of keeping per-chunk residuals
+    alive. ``reduce`` (e.g. a ``psum`` under shard_map) is applied to
+    every chunk's partial sum, the remainder chunk included.
+
+    Per-client BN stats are still returned with the full (size, ...)
+    leading dim — they are (size, C)-small; the memory win is the
+    activations, not the stats.
+    """
+    r = reduce if reduce is not None else (lambda s: s)
+    nc, rem = divmod(size, chunk)
+    acc = jnp.zeros((x.shape[0], spec.num_classes), jnp.float32)
+    stats = None
+    if nc:
+        main = jax.tree.map(
+            lambda a: a[:nc * chunk].reshape((nc, chunk) + a.shape[1:]),
+            params)
+
+        @jax.checkpoint
+        def fwd(p_c):
+            return _group_stack_forward(p_c, spec, x, chunk, with_stats)
+
+        def body(carry, p_c):
+            lgs, st = fwd(p_c)
+            return carry + r(jnp.sum(lgs, axis=0)), st
+
+        acc, st_main = jax.lax.scan(body, acc, main)
+        stats = jax.tree.map(
+            lambda a: a.reshape((nc * chunk,) + a.shape[2:]), st_main)
+    if rem:
+        tail = jax.tree.map(lambda a: a[nc * chunk:], params)
+        lgs_t, st_t = _group_stack_forward(tail, spec, x, rem, with_stats)
+        acc = acc + r(jnp.sum(lgs_t, axis=0))
+        stats = st_t if stats is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), stats, st_t)
+    return acc, stats
+
+
+def _group_sum_sharded(params, spec, x, size, mesh, with_stats,
+                       chunk=None):
     """Sharded group sum: the leading client dim splits over the mesh's
     ``clients`` axis, each shard runs the same fused/vmapped forward on
-    its size // axis clients, and the sum lowers to ONE ``psum``.
+    its size // axis clients, and the sum lowers to ONE ``psum`` — or,
+    with ``chunk`` set, to one psum per scanned sub-chunk
+    (``_chunked_stack_sum``), keeping the replicated fp32 accumulator
+    exact while no shard ever materializes its full local logit block.
 
     Returns (group_sum (B, K) f32 replicated, stacked stats with the full
     (size, ...) leading dim sharded over ``clients``). Callers guarantee
@@ -218,8 +289,14 @@ def _group_sum_sharded(params, spec, x, size, mesh, with_stats):
     loc = size // client_axis_size(mesh)
 
     def local(p_shard, xb):
-        lgs, st = _group_stack_forward(p_shard, spec, xb, loc, with_stats)
-        s = jax.lax.psum(jnp.sum(lgs, axis=0), CLIENT_AXIS)
+        if chunk and 0 < chunk < loc:
+            s, st = _chunked_stack_sum(
+                p_shard, spec, xb, loc, chunk, with_stats,
+                reduce=lambda v: jax.lax.psum(v, CLIENT_AXIS))
+        else:
+            lgs, st = _group_stack_forward(p_shard, spec, xb, loc,
+                                           with_stats)
+            s = jax.lax.psum(jnp.sum(lgs, axis=0), CLIENT_AXIS)
         return (s, st) if with_stats else s
 
     out_specs = (P(), P(CLIENT_AXIS)) if with_stats else P()
@@ -230,7 +307,7 @@ def _group_sum_sharded(params, spec, x, size, mesh, with_stats):
 
 def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
                             with_bn_stats: bool = False, mesh=None,
-                            group_masks=None):
+                            group_masks=None, chunk: int | None = None):
     """Eq. (1) over the grouped representation — one vmapped forward per
     architecture group instead of one unrolled forward per client.
 
@@ -249,6 +326,15 @@ def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
     sharded path sees the surviving group size (re-checking
     divisibility, falling back to the single-device forward when the
     reduced size no longer shards).
+
+    chunk: > 0 streams each stacked group's logit sum through
+    ``chunk``-client scanned slices (``_chunked_stack_sum``, DESIGN.md
+    §13) so the stage-2 teacher never materializes a (size, B, K)
+    activation block; routed from ``scfg.teacher_chunk``
+    (configs.backend.resolve_exec_policy). Sum order within a group is
+    unchanged — partial fp32 sums accumulate in client order — so the
+    result matches the unchunked path to float tolerance (and bitwise
+    when the chunk divides the group evenly on one device).
     """
     if group_masks is not None:
         gspecs, gparams = apply_group_masks(gspecs, gparams, group_masks)
@@ -266,7 +352,11 @@ def grouped_ensemble_logits(gspecs, gparams, x: jnp.ndarray, *,
         else:
             if mesh is not None and group_shardable(mesh, size):
                 group_sum, stacked_stats = _group_sum_sharded(
-                    params, spec, x, size, mesh, with_bn_stats)
+                    params, spec, x, size, mesh, with_bn_stats,
+                    chunk=chunk)
+            elif chunk and 0 < chunk < size:
+                group_sum, stacked_stats = _chunked_stack_sum(
+                    params, spec, x, size, chunk, with_bn_stats)
             else:
                 lgs, stacked_stats = _group_stack_forward(
                     params, spec, x, size, with_bn_stats)

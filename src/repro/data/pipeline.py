@@ -53,19 +53,30 @@ class BatchPlan:
 
 
 def build_batch_plan(shard_sizes: Sequence[int], batch_size: int, *,
-                     epochs: int, seeds: Sequence[int]) -> BatchPlan:
+                     epochs: int, seeds: Sequence[int],
+                     steps_per_epoch: int | None = None) -> BatchPlan:
     """Pad each client's shard schedule to the group's max batches/epoch
     and precompute every epoch's seeded permutation up front.
 
     Per client k the flattened (idx, mask) stream restricted to valid
     slots is EXACTLY the ``batches(..., seed=seeds[k], epochs=epochs)``
     index stream (drop_last=False), so grouped and per-client training
-    consume identical data orderings.
+    consume identical data orderings. ``steps_per_epoch`` (>= every
+    client's own batches/epoch) pads the plan to an externally imposed
+    step count instead of this group's max — the chunked engine uses it
+    to keep every chunk of a bucket on one compiled shape; the extra
+    fully-masked steps pass params/opt state through untouched, so the
+    trained result is invariant to it.
     """
     assert len(shard_sizes) == len(seeds)
     m = len(shard_sizes)
     nb = [-(-int(n) // batch_size) for n in shard_sizes]   # ceil
     nb_max = max(nb) if nb else 0
+    if steps_per_epoch is not None:
+        if steps_per_epoch < nb_max:
+            raise ValueError(f"steps_per_epoch={steps_per_epoch} < group "
+                             f"max batches/epoch {nb_max}")
+        nb_max = int(steps_per_epoch)
     steps = epochs * nb_max
     idx = np.zeros((m, steps, batch_size), np.int32)
     mask = np.zeros((m, steps, batch_size), bool)
@@ -82,12 +93,83 @@ def build_batch_plan(shard_sizes: Sequence[int], batch_size: int, *,
                      epochs=epochs, batch_size=batch_size)
 
 
-def pad_shards(shards: Sequence[tuple]) -> tuple[np.ndarray, np.ndarray]:
+def bucket_members(shard_sizes: Sequence[int], batch_size: int,
+                   mode: str = "off") -> list[tuple[int, ...]]:
+    """Bin clients by batches/epoch before padding (DESIGN.md §13).
+
+    Returns a partition of ``range(m)`` as member-index tuples, ordered
+    by ascending bucket step count; members keep their original order
+    within a bucket. Modes:
+
+      off      — one bucket (today's single padded plan, bit-compatible)
+      pow2     — bucket key = next power of two of ceil(n_k/batch): any
+                 client wastes < 2x padded steps inside its bucket
+      quantile — 4 quantile bins of the batches/epoch distribution:
+                 adaptive to the actual skew (Dirichlet alpha <= 0.1
+                 shards are long-tailed, where fixed pow2 edges can
+                 leave the tail bucket wide)
+
+    Bucketing NEVER changes a client's seeded minibatch stream — only
+    the number of fully-masked padding steps appended to it (the stream
+    identity is per-construction: ``build_batch_plan`` fills each
+    client's row independently of its co-bucketed peers).
+    """
+    nb = [-(-int(n) // batch_size) for n in shard_sizes]
+    m = len(nb)
+    if mode == "off" or m <= 1:
+        return [tuple(range(m))] if m else []
+    if mode == "pow2":
+        def key(b):
+            p = 1
+            while p < max(b, 1):
+                p *= 2
+            return p
+        keys = [key(b) for b in nb]
+    elif mode == "quantile":
+        qs = np.quantile(np.asarray(nb, np.float64), [0.25, 0.5, 0.75])
+        keys = list(np.searchsorted(qs, np.asarray(nb, np.float64),
+                                    side="left"))
+    else:
+        raise ValueError(f"unknown plan_bucketing mode {mode!r}")
+    buckets: dict = {}
+    for i, k in enumerate(keys):
+        buckets.setdefault(k, []).append(i)
+    # order buckets by their actual max batches/epoch (ascending) so
+    # compile shapes grow monotonically across a group's buckets
+    return [tuple(buckets[k]) for k in
+            sorted(buckets, key=lambda k: max(nb[i] for i in buckets[k]))]
+
+
+def plan_step_waste(shard_sizes: Sequence[int], batch_size: int,
+                    mode: str = "off") -> float:
+    """Fraction of scheduled optimizer steps that are fully-masked
+    padding under ``mode`` bucketing (epoch count cancels out). The
+    benchmark scaling table reports this per mode; the m=1000
+    Dirichlet-skew acceptance bound (>= 3x reduction) is tested in
+    tests/test_scale.py."""
+    nb = [-(-int(n) // batch_size) for n in shard_sizes]
+    total = real = 0
+    for members in bucket_members(shard_sizes, batch_size, mode):
+        bmax = max(nb[i] for i in members)
+        total += bmax * len(members)
+        real += sum(nb[i] for i in members)
+    return 1.0 - real / total if total else 0.0
+
+
+def pad_shards(shards: Sequence[tuple], *,
+               pad_to: int | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Stack ragged per-client shards [(x_k, y_k), ...] into rectangular
     (m, max_n, ...) arrays, zero-padded past each client's n_k. Padding
-    rows are never gathered by a BatchPlan (all plan indices < n_k)."""
+    rows are never gathered by a BatchPlan (all plan indices < n_k).
+    ``pad_to`` (>= max n_k) pads to an externally imposed width — the
+    chunked engine passes its bucket's max so every chunk shares one
+    compiled shape."""
     m = len(shards)
     max_n = max(len(y) for _, y in shards)
+    if pad_to is not None:
+        if pad_to < max_n:
+            raise ValueError(f"pad_to={pad_to} < largest shard {max_n}")
+        max_n = int(pad_to)
     x0, y0 = shards[0]
     xs = np.zeros((m, max_n, *x0.shape[1:]), x0.dtype)
     ys = np.zeros((m, max_n), y0.dtype)

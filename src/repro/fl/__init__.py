@@ -1,11 +1,13 @@
-from repro.fl.client import (local_update, local_update_grouped,
+from repro.fl.client import (local_update, local_update_bucketed,
+                             local_update_grouped,
                              make_grouped_local_update, make_local_step)
 from repro.fl.fedavg import fedavg, fedavg_stacked
 from repro.fl.federation import (ClientList, build_grouped_federation,
                                  client_specs, group_specs,
                                  train_clients_grouped)
 from repro.fl.protocol import (CommLedger, QuorumError, UploadError,
-                               admit_uploads, build_federation, param_bytes,
+                               admit_uploads, build_federation,
+                               direction_outliers, param_bytes,
                                validate_upload)
 from repro.fl.faults import (FAULT_KINDS, Fault, apply_upload_faults,
                              build_fault_plan, corrupt_params)
@@ -14,12 +16,13 @@ from repro.fl.multiround import dense_multi_round
 from repro.fl.sharding import (CLIENT_AXIS, group_shardable, put_grouped,
                                put_stacked, resolve_mesh, stack_specs)
 
-__all__ = ["local_update", "local_update_grouped",
+__all__ = ["local_update", "local_update_bucketed", "local_update_grouped",
            "make_grouped_local_update", "make_local_step", "fedavg",
            "fedavg_stacked", "ClientList", "build_grouped_federation",
            "client_specs", "group_specs", "train_clients_grouped",
            "CommLedger", "QuorumError", "UploadError", "admit_uploads",
-           "build_federation", "param_bytes", "validate_upload",
+           "build_federation", "direction_outliers", "param_bytes",
+           "validate_upload",
            "FAULT_KINDS", "Fault", "apply_upload_faults",
            "build_fault_plan", "corrupt_params", "fed_df",
            "fed_dafl", "fed_adi", "make_distill_step", "dense_multi_round",

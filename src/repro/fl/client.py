@@ -29,7 +29,8 @@ import numpy as np
 
 from repro import optim
 from repro.core.dense import merge_bn_stats
-from repro.data.pipeline import BatchPlan, batches, build_batch_plan
+from repro.data.pipeline import (BatchPlan, batches, bucket_members,
+                                 build_batch_plan, pad_shards)
 from repro.models.cnn import (CNNSpec, cnn_apply, cnn_stack_train_grouped,
                               is_conv_stack)
 
@@ -241,5 +242,77 @@ def local_update_grouped(stacked_params, spec: CNNSpec, xs, ys,
     return stacked_params, {"loss": losses, "class_counts": class_counts}
 
 
+def local_update_bucketed(make_init, spec: CNNSpec, shards, *,
+                          batch_size: int, epochs: int, seeds,
+                          lr: float = 0.01, momentum: float = 0.9,
+                          use_ldam: bool = False, num_classes: int = 10,
+                          class_counts: np.ndarray | None = None,
+                          mesh=None, policy=None, bucketing: str = "off",
+                          chunk: int | None = None):
+    """Bucketed + chunked LocalUpdate over one architecture group
+    (DESIGN.md §13): the m=1000-scale driver around
+    ``local_update_grouped``.
+
+    ``make_init(j)`` lazily materializes member j's initial params;
+    ``shards``/``seeds``/``class_counts`` are per-member in group order.
+    Members are first binned by batches/epoch (``pipeline.bucket_members``,
+    ``bucketing``), then each bucket trains in fixed-size ``chunk``-client
+    slices: per slice the host builds only O(chunk) state — the stacked
+    inits, the padded shard tensor and the BatchPlan — and hands it to
+    ``local_update_grouped``'s single donated-carry jitted scan. All full
+    chunks of a bucket share one compiled shape (shards pad to the
+    bucket's max n, plans pad to the bucket's max batches/epoch via
+    ``steps_per_epoch``), so chunking costs one trace per
+    (bucket-shape, chunk-size), not per chunk.
+
+    With ``bucketing="off"`` and ``chunk`` unset this degenerates to exactly
+    the single-plan, single-call path (same tensors, same jit) — the
+    m=10 bit-compat boundary. With them on, per-client results stay
+    BITWISE identical anyway: a client's minibatch stream never depends
+    on its co-bucketed peers, padding steps pass params and momentum
+    through untouched, and the per-client step math is independent of
+    the stacked batch size (tests/test_scale.py pins all three claims).
+
+    Returns the trained params stacked in ORIGINAL group member order —
+    mandatory so downstream survivor masks (fl.protocol.admit_uploads)
+    and per-level fedavg weights stay aligned under bucketing.
+    """
+    sizes = [len(y) for _, y in shards]
+    size = len(shards)
+    pieces, order = [], []
+    for members in bucket_members(sizes, batch_size, bucketing):
+        nb_bucket = max(-(-sizes[j] // batch_size) for j in members)
+        pad_n = max(sizes[j] for j in members)
+        step = chunk if chunk else len(members)
+        for c0 in range(0, len(members), step):
+            mem = members[c0:c0 + step]
+            stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[make_init(j) for j in mem])
+            xs, ys = pad_shards([shards[j] for j in mem], pad_to=pad_n)
+            plan = build_batch_plan([sizes[j] for j in mem], batch_size,
+                                    epochs=epochs,
+                                    seeds=[seeds[j] for j in mem],
+                                    steps_per_epoch=nb_bucket)
+            cc = None if class_counts is None else \
+                np.asarray(class_counts)[list(mem)]
+            trained, _ = local_update_grouped(
+                stacked0, spec, xs, ys, plan, lr=lr, momentum=momentum,
+                use_ldam=use_ldam, num_classes=num_classes,
+                class_counts=cc, mesh=mesh, policy=policy)
+            pieces.append(trained)
+            order.extend(mem)
+    if len(pieces) == 1:
+        stacked = pieces[0]
+    else:
+        # device-side concat of chunk results (never a host restack) ...
+        stacked = jax.tree.map(lambda *ps: jnp.concatenate(ps, 0), *pieces)
+    if list(order) != list(range(size)):
+        # ... then one constant-index gather back to group member order
+        perm = np.argsort(np.asarray(order, np.int64))
+        stacked = jax.tree.map(lambda a: a[perm], stacked)
+    return stacked
+
+
 __all__ = ["make_local_step", "local_update", "make_grouped_local_update",
-           "local_update_grouped", "build_batch_plan"]
+           "local_update_grouped", "local_update_bucketed",
+           "build_batch_plan"]

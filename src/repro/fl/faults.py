@@ -27,7 +27,11 @@ Fault kinds (``FAULT_KINDS``):
                    parameter-norm outlier screen (when enabled).
   * ``signflip`` — Byzantine sign flip (params -> -params). Norm-preserving
                    by construction: it deliberately PASSES the norm screen
-                   (the documented detection gap — DESIGN.md §10).
+                   (the documented detection gap — DESIGN.md §10). Caught
+                   by the opt-in leave-one-out cohort-mean cosine screen
+                   (``scfg.cos_screen``, fl.protocol.direction_outliers):
+                   a flipped upload points away from its trained cohort,
+                   cosine ≈ -1 to the leave-one-out mean.
 
 Determinism: the plan is a pure function of ``(scfg.fault_plan,
 scfg.dropout_frac, scfg.fault_seed, round)`` and every corruption derives

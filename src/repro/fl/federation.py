@@ -31,13 +31,11 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ensemble import Client
 from repro.data.partition import dirichlet_partition
-from repro.data.pipeline import build_batch_plan, pad_shards
-from repro.fl.client import local_update_grouped
+from repro.fl.client import local_update_bucketed
 from repro.models.cnn import CNNSpec, cnn_init
 
 
@@ -83,7 +81,7 @@ def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
                           n_data: Sequence[int] | None = None,
                           ledger=None,
                           upload_tag: str = "round0-model-upload",
-                          mesh=None) -> ClientList:
+                          mesh=None, policy=None) -> ClientList:
     """Run the grouped LocalUpdate phase over an arbitrary federation.
 
     specs/shards/seeds are per-client (federation order). Initial params
@@ -95,32 +93,44 @@ def train_clients_grouped(specs: Sequence[CNNSpec], shards: Sequence[tuple],
     grouped training). mesh: optional ("clients", "data") mesh; each
     group whose size the ``clients`` axis divides trains client-sharded
     (fl.client.local_update_grouped).
+
+    policy: an ExecPolicy (``configs.backend.resolve_exec_policy``)
+    routing the federation-scale knobs: ``bucketing`` bins each group by
+    batches/epoch before padding and ``stack_chunk`` streams each bucket
+    through fixed-size chunks so group setup peaks at O(chunk) host
+    memory (fl.client.local_update_bucketed, DESIGN.md §13). The stacked
+    group params are always reassembled in original group member order,
+    so survivor masks and fedavg weights compose with buckets unchanged.
+    With the knobs off (every registry default) the path is bitwise the
+    unbucketed single-program engine.
     """
     from repro.fl.protocol import param_bytes   # lazy: protocol routes here
     m = len(specs)
     assert init_params is not None or init_keys is not None
     if n_data is None:
         n_data = [len(y) for _, y in shards]
+    bucketing = policy.bucketing if policy is not None else "off"
+    stack_chunk = policy.stack_chunk if policy is not None else 0
     groups = group_specs(specs)
     gspecs = [(spec, len(idx)) for spec, idx in groups]
     gparams: list = []
     params_view: list = [None] * m
     counts_view: list = [None] * m
     for spec, idx in groups:
-        per = [init_params[i] if init_params is not None
-               else cnn_init(init_keys[i], spec) for i in idx]
-        stacked0 = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
         group_shards = [shards[i] for i in idx]
-        sizes = [len(y) for _, y in group_shards]
-        xs, ys = pad_shards(group_shards)
-        plan = build_batch_plan(sizes, batch_size, epochs=epochs,
-                                seeds=[seeds[i] for i in idx])
         counts = np.stack([np.bincount(y, minlength=num_classes)
                            for _, y in group_shards])
-        trained, _ = local_update_grouped(
-            stacked0, spec, xs, ys, plan, lr=lr, momentum=momentum,
-            use_ldam=use_ldam, num_classes=num_classes, class_counts=counts,
-            mesh=mesh)
+
+        def make_init(j, _spec=spec, _idx=idx):
+            return init_params[_idx[j]] if init_params is not None \
+                else cnn_init(init_keys[_idx[j]], _spec)
+
+        trained = local_update_bucketed(
+            make_init, spec, group_shards, batch_size=batch_size,
+            epochs=epochs, seeds=[seeds[i] for i in idx], lr=lr,
+            momentum=momentum, use_ldam=use_ldam, num_classes=num_classes,
+            class_counts=counts, mesh=mesh, policy=policy,
+            bucketing=bucketing, chunk=stack_chunk)
         size = len(idx)
         if size == 1:
             trained = jax.tree.map(lambda a: a[0], trained)
@@ -154,7 +164,9 @@ def build_grouped_federation(key, scfg, data, *, ledger=None, seed: int = 0):
     ``scfg.ensemble_shard_mode="clients"`` trains each (divisible) group
     sharded over the ("clients", "data") mesh — same seeds, same math.
     """
+    from repro.configs.backend import resolve_exec_policy
     from repro.fl.sharding import resolve_mesh
+    pol = resolve_exec_policy(scfg)
     x, y = data["train"]
     parts = dirichlet_partition(y, scfg.n_clients, scfg.alpha, seed=seed)
     shards = [(x[idx], y[idx]) for idx in parts]
@@ -165,7 +177,8 @@ def build_grouped_federation(key, scfg, data, *, ledger=None, seed: int = 0):
         momentum=scfg.local_momentum, batch_size=scfg.batch_size,
         use_ldam=scfg.use_ldam, num_classes=scfg.num_classes,
         seeds=[seed + i for i in range(scfg.n_clients)],
-        init_keys=list(keys), ledger=ledger, mesh=resolve_mesh(scfg))
+        init_keys=list(keys), ledger=ledger, mesh=resolve_mesh(pol),
+        policy=pol)
     return clients, shards
 
 

@@ -13,8 +13,11 @@ distinguishes ``delivered`` (counted in ``uplink_bytes``) from
 
 Admission control (``admit_uploads``) is the defense half of the fault
 layer (DESIGN.md §10): every arrived upload passes a finite check, a
-spec/shape validation against the client's declared architecture, and an
-optional parameter-norm outlier screen before it may join the ensemble.
+spec/shape validation against the client's declared architecture, an
+optional parameter-norm outlier screen (``scfg.norm_screen``) and an
+optional leave-one-out cohort-mean cosine screen (``scfg.cos_screen`` —
+catches the norm-preserving sign flips the norm screen passes by
+design) before it may join the ensemble.
 ``scfg.upload_policy`` decides what a failed screen means:
 
   * ``"quarantine"`` (default) — the client is excluded via survivor
@@ -143,7 +146,8 @@ def norm_outliers(clients, candidates, threshold: float) -> dict[int, str]:
     ``threshold`` median-absolute-deviations. Opt-in
     (``scfg.norm_screen > 0``); small cohorts are skipped — a 3-client
     median is noise, not a defense. Sign flips are norm-preserving and
-    pass by design (the documented gap, DESIGN.md §10).
+    pass by design (the documented gap, DESIGN.md §10 — closed by the
+    opt-in ``direction_outliers`` cosine screen below).
     """
     from repro.optim.optimizers import global_norm
     out: dict[int, str] = {}
@@ -167,6 +171,57 @@ def norm_outliers(clients, candidates, threshold: float) -> dict[int, str]:
     return out
 
 
+def direction_outliers(clients, candidates, threshold: float) -> dict[int, str]:
+    """Leave-one-out cohort-mean cosine screen — closes the norm screen's
+    sign-flip gap (DESIGN.md §10): a negated upload keeps its norm
+    exactly but points AWAY from every honest peer, so its cosine to the
+    cohort mean is ≈ -1 while honest clients trained on same-distribution
+    shards cluster directionally (cosine well above 0 post-training; raw
+    random inits do NOT cluster, which is why this is opt-in —
+    ``scfg.cos_screen``, None = off).
+
+    The mean must exclude the candidate itself: with self included, a
+    flipped upload's own -p_i term dominates the correlation and drags
+    its cosine back toward +1/sqrt(m). So for cohort sum S = Σ p_j the
+    screen tests cos(p_i, S - p_i) < threshold (cosine to the
+    leave-one-out sum equals cosine to the leave-one-out mean — positive
+    scaling). Two passes over the cohort keep host memory at O(P) — one
+    flattened vector plus the running sum — never O(m·P), which is what
+    lets the screen run at the m=1000 federation target.
+
+    Cohorts with < 5 candidates are skipped, matching ``norm_outliers``:
+    a tiny cohort's mean direction is noise, not a defense.
+    """
+    out: dict[int, str] = {}
+    cohorts: dict[CNNSpec, list[int]] = {}
+    for i in candidates:
+        cohorts.setdefault(clients[i].spec, []).append(i)
+
+    def flat(p):
+        return np.concatenate([np.asarray(a, np.float64).ravel()
+                               for a in jax.tree.leaves(p)])
+
+    for spec, idx in cohorts.items():
+        if len(idx) < 5:
+            continue
+        s = None
+        for i in idx:                     # pass 1: streaming cohort sum
+            v = flat(clients[i].params)
+            s = v if s is None else s + v
+        for i in idx:                     # pass 2: leave-one-out cosine
+            v = flat(clients[i].params)
+            loo = s - v
+            nv, nl = np.linalg.norm(v), np.linalg.norm(loo)
+            if nv == 0.0 or nl == 0.0:
+                continue
+            cos = float(np.dot(v, loo) / (nv * nl))
+            if cos < threshold:
+                out[i] = (f"direction outlier: cosine {cos:.3f} to "
+                          f"leave-one-out cohort mean < "
+                          f"threshold {threshold}")
+    return out
+
+
 def _zero_like(params):
     return jax.tree.map(lambda a: np.zeros_like(np.asarray(a)), params)
 
@@ -175,6 +230,7 @@ def admit_uploads(clients, *, arrived=None, scfg=None,
                   upload_policy: str | None = None,
                   quorum: float | None = None,
                   norm_screen: float | None = None,
+                  cos_screen: float | None = None,
                   ledger: CommLedger | None = None,
                   upload_tag: str = "round0-model-upload"):
     """Server-side admission control: screen every arrived upload, build
@@ -209,6 +265,8 @@ def admit_uploads(clients, *, arrived=None, scfg=None,
     q = quorum if quorum is not None else getattr(scfg, "quorum", 0.5)
     screen = norm_screen if norm_screen is not None else \
         getattr(scfg, "norm_screen", 0.0)
+    cscreen = cos_screen if cos_screen is not None else \
+        getattr(scfg, "cos_screen", None)
 
     m = len(clients)
     arrived = np.ones(m, bool) if arrived is None else np.asarray(
@@ -224,6 +282,9 @@ def admit_uploads(clients, *, arrived=None, scfg=None,
     if screen and screen > 0:
         ok = [i for i in range(m) if i not in quarantined]
         quarantined.update(norm_outliers(clients, ok, float(screen)))
+    if cscreen is not None:
+        ok = [i for i in range(m) if i not in quarantined]
+        quarantined.update(direction_outliers(clients, ok, float(cscreen)))
 
     rejected = {i: r for i, r in quarantined.items() if arrived[i]}
     if policy == "strict" and rejected:

@@ -201,9 +201,10 @@ def distill_kl_bwd(teacher_logits, student_logits, lse_t, lse_s, kl, g, *,
 
 # ------------------------------------------------------------ custom VJP --
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
 def distill_kl_vjp(teacher_logits, student_logits, block_rows, block_v,
-                   interpret=False, with_teacher_grad=True):
+                   interpret=False, with_teacher_grad=True,
+                   bwd_rows=None, bwd_v=None):
     """distill_kl with the fused Pallas backward (DESIGN.md §9).
 
     Residual contract: only the inputs (alive anyway) and the per-row
@@ -216,12 +217,20 @@ def distill_kl_vjp(teacher_logits, student_logits, block_rows, block_v,
     the teacher really is a non-differentiated input; an eager caller
     that actually consumes the teacher gradient should keep
     ``with_teacher_grad=True``.
+
+    ``bwd_rows``/``bwd_v`` (None -> reuse the forward blocks) give the
+    backward kernel its OWN block shapes: it streams up to 2x the
+    forward's tensor traffic (dt and ds emission) with a different
+    arithmetic intensity, so its best tile need not be the forward's —
+    the registry/autotuner resolve them under the separate
+    ``distill_kl_bwd`` kernel entry (configs/backend.py, DESIGN.md §11).
     """
     return distill_kl(teacher_logits, student_logits, block_rows=block_rows,
                       block_v=block_v, interpret=interpret)
 
 
-def _vjp_fwd(t, s, block_rows, block_v, interpret, with_teacher_grad):
+def _vjp_fwd(t, s, block_rows, block_v, interpret, with_teacher_grad,
+             bwd_rows, bwd_v):
     kl, (mt, zt, _st, ms, zs) = distill_kl(
         t, s, block_rows=block_rows, block_v=block_v, interpret=interpret,
         return_stats=True)
@@ -229,11 +238,14 @@ def _vjp_fwd(t, s, block_rows, block_v, interpret, with_teacher_grad):
     return kl, (t, s, mt + jnp.log(zt), ms + jnp.log(zs), kl)
 
 
-def _vjp_bwd(block_rows, block_v, interpret, with_teacher_grad, res, g):
+def _vjp_bwd(block_rows, block_v, interpret, with_teacher_grad,
+             bwd_rows, bwd_v, res, g):
     t, s, lse_t, lse_s, kl = res
     dt, ds = distill_kl_bwd(t, s, lse_t, lse_s, kl,
-                            g.astype(jnp.float32), block_rows=block_rows,
-                            block_v=block_v, interpret=interpret,
+                            g.astype(jnp.float32),
+                            block_rows=bwd_rows if bwd_rows else block_rows,
+                            block_v=bwd_v if bwd_v else block_v,
+                            interpret=interpret,
                             with_teacher_grad=with_teacher_grad)
     if dt is None:
         # teacher declared constant by the caller: zeros cotangent — a

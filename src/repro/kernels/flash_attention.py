@@ -393,9 +393,11 @@ def flash_attention_bwd(q, k, v, o_f32, lse, do, *, causal: bool = True,
 
 # ------------------------------------------------------------ custom VJP --
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def flash_attention_vjp(q, k, v, causal, window, scale,
-                        block_q, block_k, interpret=False):
+                        block_q, block_k, interpret=False,
+                        bwd_q=None, bwd_k=None):
     """flash_attention with the streaming Pallas backward (DESIGN.md §9).
 
     Residual contract: only the inputs (alive anyway), the f32 output and
@@ -403,13 +405,21 @@ def flash_attention_vjp(q, k, v, causal, window, scale,
     q/k blocks, so neither pass materializes the (Sq, Sk) probability
     matrix in HBM. Also the only *differentiable* kernel path: jax
     autodiff through the forward pallas_call raises (its JVP rule rejects
-    ``pl.program_id``)."""
+    ``pl.program_id``).
+
+    ``bwd_q``/``bwd_k`` (None -> reuse the forward blocks) give the
+    backward its OWN tile shapes: the dq pass streams k-blocks per
+    q-block while the dk/dv pass streams q-blocks per k-block, a
+    different traffic pattern from the forward — the registry/autotuner
+    resolve them under the separate ``flash_attention_bwd`` kernel entry
+    (configs/backend.py, DESIGN.md §11)."""
     return flash_attention(q, k, v, causal=causal, window=window,
                            scale=scale, block_q=block_q, block_k=block_k,
                            interpret=interpret)
 
 
-def _vjp_fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+def _vjp_fwd(q, k, v, causal, window, scale, block_q, block_k, interpret,
+             bwd_q, bwd_k):
     out, o_f32, lse = flash_attention(
         q, k, v, causal=causal, window=window, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret,
@@ -417,11 +427,14 @@ def _vjp_fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
     return out, (q, k, v, o_f32, lse)
 
 
-def _vjp_bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+def _vjp_bwd(causal, window, scale, block_q, block_k, interpret,
+             bwd_q, bwd_k, res, g):
     q, k, v, o_f32, lse = res
     return flash_attention_bwd(q, k, v, o_f32, lse, g, causal=causal,
-                               window=window, scale=scale, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
+                               window=window, scale=scale,
+                               block_q=bwd_q if bwd_q else block_q,
+                               block_k=bwd_k if bwd_k else block_k,
+                               interpret=interpret)
 
 
 flash_attention_vjp.defvjp(_vjp_fwd, _vjp_bwd)

@@ -134,16 +134,34 @@ def _route(kernel, policy, legacy_blocks, interpret, vjp_mode, shape):
     return blocks, pol.interpret, mode
 
 
+def _bwd_blocks(kernel, policy, shape):
+    """Backward-kernel block shapes, resolved under the SEPARATE
+    ``{kernel}_bwd`` registry entry (same precedence as the forward:
+    explicit override > autotuned bucket > registry default). The
+    backward's traffic pattern differs from the forward's — re-streaming
+    for gradient emission, often ~2x the tensor volume — so its best
+    tile is tuned independently (DESIGN.md §13). ssd_scan is the
+    documented exception: its residual chunk states are snapshotted at
+    FORWARD chunk boundaries, so the backward must walk the identical
+    chunk grid and has no entry here (configs/backend.py)."""
+    name = kernel + "_bwd"
+    pol = B.resolve_exec_policy(policy)
+    if dict(pol.overrides).get(name) is None and B.autotune_enabled():
+        return B.autotune_blocks(name, shape, pol)
+    return pol.blocks_for(name, shape)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret",
-                                             "vjp_mode"))
+                                             "vjp_mode", "bwd_q", "bwd_k"))
 def _flash_impl(q, k, v, *, causal, window, block_q, block_k, interpret,
-                vjp_mode):
+                vjp_mode, bwd_q=None, bwd_k=None):
     if vjp_mode == "ref":
         return _ref.attention(q, k, v, causal=causal, window=window)
     if vjp_mode == "fused":
         return _fa.flash_attention_vjp(q, k, v, causal, window, None,
-                                       block_q, block_k, interpret)
+                                       block_q, block_k, interpret,
+                                       bwd_q, bwd_k)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=interpret)
@@ -154,12 +172,17 @@ def flash_attention(q, k, v, *, causal=True, window=0, policy=None,
                     vjp_mode=None):
     """Blockwise attention, routed by ``policy.kernel_vjp`` (see module
     docstring). Any Sq/Sk is accepted; tail blocks are masked in-kernel."""
+    shape = (q.shape[-2], k.shape[-2])
     (bq, bk), interp, mode = _route(
         "flash_attention", policy,
         {"block_q": block_q, "block_k": block_k}, interpret, vjp_mode,
-        (q.shape[-2], k.shape[-2]))
+        shape)
+    bwq = bwk = None
+    if mode == "fused":
+        bwq, bwk = _bwd_blocks("flash_attention", policy, shape)
     return _flash_impl(q, k, v, causal=causal, window=window, block_q=bq,
-                       block_k=bk, interpret=interp, vjp_mode=mode)
+                       block_k=bk, interpret=interp, vjp_mode=mode,
+                       bwd_q=bwq, bwd_k=bwk)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret",
@@ -259,8 +282,9 @@ def distill_kl(teacher_logits, student_logits, block_rows=None,
         br, bv = B.autotune_blocks("distill_kl", shape, pol)
     else:
         br, bv = pol.blocks_for("distill_kl", shape)
+    bwr, bwv = _bwd_blocks("distill_kl", pol, shape)
     return _kl.distill_kl_vjp(teacher_logits, student_logits, br, bv,
-                              pol.interpret, with_teacher_grad)
+                              pol.interpret, with_teacher_grad, bwr, bwv)
 
 
 def distill_kl_mean(teacher_logits, student_logits, **kw):

@@ -284,10 +284,76 @@ def test_seed_cache_is_valid():
         assert all(isinstance(v, int) and v > 0 for v in vals)
 
 
+# ------------------------------------------------- federation-scale knobs
+
+def test_scale_knobs_resolve_and_validate():
+    """The DESIGN.md §13 knobs route through the registry like every
+    other mode: scfg beats profile, defaults keep every knob off
+    (= bit-compatible m=10 path), unknown values fail loudly."""
+    scfg = SimpleNamespace(plan_bucketing="pow2", stack_chunk=16,
+                           fedavg_mode="tree", fedavg_branch=4,
+                           teacher_chunk=8)
+    pol = B.resolve_exec_policy(scfg, backend="cpu")
+    assert (pol.bucketing, pol.stack_chunk, pol.fedavg,
+            pol.fedavg_branch, pol.teacher_chunk) == \
+        ("pow2", 16, "tree", 4, 8)
+    for bk in B.BACKENDS:
+        d = B.resolve_exec_policy(None, backend=bk)
+        assert (d.bucketing, d.stack_chunk, d.fedavg, d.teacher_chunk) \
+            == ("off", 0, "flat", 0)
+    with pytest.raises(ValueError, match="unknown plan_bucketing"):
+        B.resolve_exec_policy(SimpleNamespace(plan_bucketing="bins"))
+    with pytest.raises(ValueError, match="unknown fedavg_mode"):
+        B.resolve_exec_policy(SimpleNamespace(fedavg_mode="ring"))
+
+
+# --------------------------------------------- backward-kernel autotune
+
+def test_bwd_kernel_entries_resolve():
+    """``{kernel}_bwd`` is a first-class registry row: its own defaults,
+    candidates and overrides, never aliased to the forward entry."""
+    pol = B.resolve_exec_policy(None, backend="cpu")
+    assert pol.blocks_for("distill_kl_bwd") == (256, 2048)
+    assert pol.blocks_for("flash_attention_bwd") == (128, 128)
+    assert "ssd_scan_bwd" not in B.KERNEL_BLOCK_ARGS   # documented exception
+    scfg = SimpleNamespace(
+        kernel_blocks={"distill_kl_bwd": {"block_rows": 64}})
+    pol2 = B.resolve_exec_policy(scfg, backend="cpu")
+    assert pol2.blocks_for("distill_kl_bwd") == (64, 2048)
+    assert pol2.blocks_for("distill_kl") == (256, 2048)  # fwd untouched
+
+
+def test_bwd_override_skips_autotune(monkeypatch):
+    """ops._bwd_blocks precedence: an explicit _bwd override wins even
+    with REPRO_AUTOTUNE=1 — no timing run may fire (timer raises)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setattr(B, "_timer", lambda *a, **k: (_ for _ in ()).throw(
+        AssertionError("timed despite override")))
+    scfg = SimpleNamespace(
+        kernel_blocks={"flash_attention_bwd": (64, 64)})
+    pol = B.resolve_exec_policy(scfg, backend="cpu")
+    assert ops._bwd_blocks("flash_attention", pol, (128, 128)) == (64, 64)
+
+
+def test_bwd_autotune_disabled_returns_registry():
+    pol = B.resolve_exec_policy(None, backend="cpu")
+    assert ops._bwd_blocks("distill_kl", pol, (999, 999)) == \
+        pol.blocks_for("distill_kl_bwd", (999, 999))
+
+
+def test_seed_cache_covers_bwd_kernels():
+    """The committed seed cache pins backward winners too, so CI never
+    times (or silently falls back) on the tuned-backward path."""
+    entries = B._read_cache_file(B._SEED_CACHE)
+    kernels = {k for (_, k, _) in entries}
+    assert {"distill_kl_bwd", "flash_attention_bwd"} <= kernels
+
+
 # ------------------------------------------------- AST enforcement sweep
 
 _BANNED_ATTRS = {"loop_mode", "client_loop_mode", "ensemble_shard_mode",
-                 "distill_kl_mode", "kernel_vjp_mode"}
+                 "distill_kl_mode", "kernel_vjp_mode", "plan_bucketing",
+                 "fedavg_mode"}
 _BLOCK_NAMES = {"block_q", "block_k", "block_rows", "block_v", "chunk",
                 "page"}
 

@@ -71,6 +71,30 @@ def test_grouped_matches_unrolled_mixed_architectures(batch):
                                float(LS.bn_loss(ref_stats)), rtol=1e-4)
 
 
+@pytest.mark.parametrize("kind", ["wrn16_1", "resnet18"])
+def test_grouped_residual_stack_matches_unrolled(kind):
+    """Size->=2 residual groups run the fused stacked forward
+    (models.cnn._grouped_resnet) instead of vmapped cnn_apply: logits
+    and L_BN inputs must match the unrolled reference — including the
+    projection-shortcut stats slots and strided SAME conv geometry."""
+    clients = _mk_clients((kind,) * 3)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16, 16, 3))
+    specs, cparams = split_clients(clients)
+    gspecs, gparams = stack_grouped(clients)
+    ref, ref_stats = ensemble_logits(specs, cparams, x, with_bn_stats=True)
+    got, got_stats = grouped_ensemble_logits(gspecs, gparams, x,
+                                             with_bn_stats=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=5e-4)
+    np.testing.assert_allclose(float(LS.bn_loss(got_stats)),
+                               float(LS.bn_loss(ref_stats)), rtol=1e-3)
+    # eval-only path (folded-BN branch) agrees too
+    got_e = grouped_ensemble_logits(gspecs, gparams, x)
+    ref_e = ensemble_logits(specs, cparams, x)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(ref_e),
+                               atol=5e-4)
+
+
 def test_grouped_matches_under_jit_homogeneous():
     clients = _mk_clients(("cnn1",) * 6)
     x = jax.random.normal(jax.random.PRNGKey(7), (16, 16, 16, 3))

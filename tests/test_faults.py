@@ -314,6 +314,44 @@ def test_norm_screen_catches_noise_not_signflip(healthy):
     assert cs.quarantined == {}
 
 
+def test_cos_screen_catches_signflip():
+    """The opt-in leave-one-out cosine screen closes the norm screen's
+    sign-flip gap (DESIGN.md §10): trained honest clients cluster
+    directionally (BN scales and shared curvature push their cosine to
+    the leave-one-out cohort mean well above 0) while a negated upload
+    points away from all of them."""
+    data = _data()
+    scfg5 = dataclasses.replace(SCFG, n_clients=5,
+                                client_kinds=("cnn1",) * 5, local_epochs=1,
+                                cos_screen=0.0)
+    flipped = dataclasses.replace(scfg5, fault_plan=((2, "signflip"),))
+    cs, _ = build_federation(jax.random.PRNGKey(0), flipped, data)
+    assert set(cs.quarantined) == {2}
+    assert "direction outlier" in cs.quarantined[2]
+    # the same screen passes an all-honest federation untouched
+    ch, _ = build_federation(
+        jax.random.PRNGKey(0),
+        dataclasses.replace(scfg5, cos_screen=None), data)
+    ch = admit_uploads(ch, scfg=scfg5)
+    assert ch.quarantined == {}
+
+
+def test_direction_screen_skips_small_cohorts():
+    """< 5 candidates per architecture cohort: the screen abstains (a
+    tiny cohort's mean direction is noise, not a defense) — even for a
+    blatant flip."""
+    from repro.core.ensemble import Client
+    from repro.fl import direction_outliers
+    from repro.models.cnn import CNNSpec, cnn_init
+    spec = CNNSpec(kind="cnn1", num_classes=4, in_ch=1, width=0.25,
+                   image_size=8)
+    base = cnn_init(jax.random.PRNGKey(0), spec)
+    clients = [Client(spec=spec, params=base, n_data=10) for _ in range(3)]
+    clients.append(Client(
+        spec=spec, params=jax.tree.map(lambda a: -a, base), n_data=10))
+    assert direction_outliers(clients, list(range(4)), 0.0) == {}
+
+
 def test_admission_policy_matrix(healthy):
     """The CI chaos matrix entry point: inject CHAOS_KIND under
     CHAOS_POLICY and assert the federation either heals (quarantine
